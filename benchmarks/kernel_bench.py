@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: XLA path wall time on this host (the Pallas TPU
+kernels run in interpret mode here, so wall-clock comparisons use the XLA
+paths; kernel correctness is covered in tests, kernel ROOFLINE in dryrun)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn, emit
+from repro.kernels.gram import ref as gram_ref
+from repro.models.attention import chunked_attention
+from repro.kernels.ssd import ops as ssd_ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    # sampled Gram (paper hot spot) across dataset-like shapes
+    for (d, m) in ((8, 4177), (54, 5810), (18, 50000)):
+        Xs = jax.random.normal(KEY, (d, m))
+        f = jax.jit(gram_ref.gram)
+        t = time_fn(f, Xs)
+        flops = 2 * d * d * m
+        emit(f"kernel/gram/d={d},m={m}", t * 1e6,
+             f"gflops={flops/t/1e9:.2f}")
+
+    # chunked attention vs naive
+    B, H, S, D = 1, 4, 1024, 64
+    q = jax.random.normal(KEY, (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(KEY, (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(KEY, (B, S, H, D), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=256,
+                                                  q_chunk=256))
+    t = time_fn(f, q, k, v)
+    emit(f"kernel/chunked_attention/S={S}", t * 1e6,
+         f"tok_per_s={B*S/t:.0f}")
+
+    # SSD chunked scan
+    Bt, S, Hh, P, N = 1, 2048, 8, 64, 64
+    x = jax.random.normal(KEY, (Bt, S, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(KEY, (Bt, S, Hh)))
+    A = -jnp.exp(jax.random.normal(KEY, (Hh,)))
+    Bm = jax.random.normal(KEY, (Bt, S, N))
+    Cm = jax.random.normal(KEY, (Bt, S, N))
+    f = jax.jit(lambda *a: ssd_ops.ssd(*a, chunk=64, use_kernel=False)[0])
+    t = time_fn(f, x, dt, A, Bm, Cm)
+    emit(f"kernel/ssd/S={S}", t * 1e6, f"tok_per_s={Bt*S/t:.0f}")
+
+
+if __name__ == "__main__":
+    run()

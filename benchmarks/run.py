@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = {
+    "fig2_convergence_b": "benchmarks.convergence_b",
+    "fig3_convergence_k": "benchmarks.convergence_k",
+    "fig4_6_speedup": "benchmarks.speedup_model",
+    "fig7_strong_scaling": "benchmarks.strong_scaling",
+    "table1_costs": "benchmarks.cost_table",
+    "kernels": "benchmarks.kernel_bench",
+    "wallclock": "benchmarks.solver_wallclock",
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args(argv)
+    picked = set(args.only.split(",")) if args.only else set(SUITES)
+
+    import importlib
+    failures = []
+    for name, mod_name in SUITES.items():
+        if name not in picked:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

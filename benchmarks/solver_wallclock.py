@@ -1,0 +1,26 @@
+"""Measured single-host wall-clock: CA vs classical per-iteration cost must
+be ~equal (the paper: flops unchanged) — the win is purely in communication,
+which the HLO round counts (cost_table) capture."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import SolverConfig, sfista, ca_sfista, spnm, ca_spnm
+from repro.data import make_dataset_like
+from benchmarks.common import time_fn, emit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    prob, _ = make_dataset_like("covtype", scale=0.1)
+    cfg = SolverConfig(T=64, k=8, b=0.05)
+    for name, solver in (("sfista", sfista), ("ca_sfista", ca_sfista),
+                         ("spnm", spnm), ("ca_spnm", ca_spnm)):
+        t = time_fn(lambda k: solver(prob, cfg, k), KEY, iters=3, warmup=1)
+        emit(f"wallclock/{name}/T=64", t * 1e6,
+             f"us_per_iter={t*1e6/cfg.T:.1f}")
+
+
+if __name__ == "__main__":
+    run()

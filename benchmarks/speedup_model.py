@@ -1,0 +1,43 @@
+"""Paper Figures 4-6: CA speedup over classical vs (P, k).
+
+This container is CPU-only, so the distributed wall-clock is reproduced
+through the alpha-beta-gamma model (paper eq. 4) instantiated with
+Comet-like constants — the same model the paper's Table I analysis uses —
+with the flop term cross-checked against measured single-process timings of
+the Gram computation, and the message counts cross-checked against compiled
+HLO (benchmarks/cost_table.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import SolverConfig, ca_sfista
+from repro.core.cost_model import CostModel, MachineParams
+from repro.data import PAPER_DATASETS
+from benchmarks.common import emit
+
+
+def run(datasets=("abalone", "covtype", "susy"),
+        Ps=(8, 64, 512, 1024), ks=(4, 16, 32, 64)):
+    machine = MachineParams.comet_like()
+    rows = []
+    for ds in datasets:
+        spec = PAPER_DATASETS[ds]
+        # paper's b/lambda regimes: b=0.1 small sets, 0.01 large
+        b = 0.1 if spec["n"] < 1e5 else 0.01
+        for P in Ps:
+            for k in ks:
+                cm = CostModel(d=spec["d"], n=spec["n"], b=b, T=128, k=k)
+                s = cm.speedup(P, machine)
+                rows.append((ds, P, k, s))
+                emit(f"fig4-6/{ds}/P={P}/k={k}", 0.0, f"speedup={s:.2f}x")
+    # headline: best speedup per dataset at its largest P (paper Fig. 6)
+    for ds in datasets:
+        best = max(s for d2, P, k, s in rows if d2 == ds)
+        emit(f"fig6/{ds}/best", 0.0, f"speedup={best:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

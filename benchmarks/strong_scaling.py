@@ -1,0 +1,33 @@
+"""Paper Figure 7: strong scaling of CA vs classical, 100 iterations.
+
+Execution time model (eq. 4) for 1..1024 processors, k=32, reporting where
+the classical algorithm stops scaling (latency-dominated) while the CA
+variant continues — and the bandwidth-bound regime the paper demonstrates
+with the covtype p=1024 point."""
+from __future__ import annotations
+
+from repro.core.cost_model import CostModel, MachineParams
+from repro.data import PAPER_DATASETS
+from benchmarks.common import emit
+
+
+def run(datasets=("abalone", "covtype", "susy"), k=32):
+    machine = MachineParams.comet_like()
+    rows = []
+    for ds in datasets:
+        spec = PAPER_DATASETS[ds]
+        b = 0.1 if spec["n"] < 1e5 else 0.01
+        cm = CostModel(d=spec["d"], n=spec["n"], b=b, T=100, k=k)
+        prev_classical = None
+        for P in (1, 8, 64, 256, 1024):
+            tc = cm.time(P, machine, ca=False)
+            ta = cm.time(P, machine, ca=True)
+            rows.append((ds, P, tc, ta))
+            emit(f"fig7/{ds}/P={P}", 0.0,
+                 f"t_classical={tc:.4f}s;t_ca={ta:.4f}s")
+            prev_classical = tc
+    return rows
+
+
+if __name__ == "__main__":
+    run()

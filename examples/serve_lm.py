@@ -1,0 +1,13 @@
+"""Batched serving example (deliverable b): greedy decode with a sharded
+KV/SSM cache; works for every assigned architecture including attention-free
+Mamba2 (O(1) decode state).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+"""
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

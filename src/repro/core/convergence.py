@@ -1,0 +1,28 @@
+"""Convergence metrics: the paper's relative solution error (§V-A).
+
+rel_err(w) = ||w - w_opt|| / ||w_opt||, with w_opt from a high-accuracy
+deterministic FISTA run (standing in for TFOCS at tol 1e-8, which is not
+available offline)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.problem import LassoProblem
+from repro.core.fista import fista_reference
+
+
+def solve_reference(problem: LassoProblem, iters: int = 4000):
+    """High-accuracy solution w_opt (the TFOCS stand-in)."""
+    return fista_reference(problem, iters=iters)
+
+
+def relative_solution_error(w, w_opt):
+    return jnp.linalg.norm(w - w_opt) / jnp.maximum(jnp.linalg.norm(w_opt), 1e-30)
+
+
+def objective_history(problem: LassoProblem, history):
+    """F(w_j) for a (T, d) iterate history (vectorized)."""
+    r = history @ problem.X - problem.y[None, :]
+    quad = 0.5 / problem.n * jnp.sum(r * r, axis=1)
+    l1 = problem.lam * jnp.sum(jnp.abs(history), axis=1)
+    return quad + l1

@@ -1,0 +1,65 @@
+"""Classical SFISTA (paper Algorithm I) and a deterministic full-batch FISTA
+reference used as the convergence oracle."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import LassoProblem, SolverConfig, lipschitz_step
+from repro.core.sampling import sample_index_batch
+from repro.core.gram import sampled_gram
+from repro.core.update_rules import init_state, fista_update
+from repro.core.soft_threshold import soft_threshold, fista_momentum
+
+
+def _resolve_step(problem: LassoProblem, cfg: SolverConfig):
+    if cfg.step_size is not None:
+        return jnp.asarray(cfg.step_size, problem.X.dtype)
+    return lipschitz_step(problem.X, cfg.power_iters)
+
+
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "use_kernel"))
+def sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+           w0=None, collect_history: bool = False, use_kernel: bool = False):
+    """Stochastic FISTA: T iterations, one sampled-Gram + update per iteration.
+
+    In the distributed setting each iteration all-reduces (G_j, R_j) —
+    the communication bottleneck the CA variant removes (see ca_fista.py).
+    Returns w_T, or (w_T, (k, d) iterate history) when collect_history.
+    """
+    d, n = problem.X.shape
+    m = max(int(cfg.b * n), 1)
+    t = _resolve_step(problem, cfg)
+    w0 = jnp.zeros((d,), problem.X.dtype) if w0 is None else w0
+    idx = sample_index_batch(key, cfg.T, n, m, cfg.with_replacement)
+
+    def step(state, idx_j):
+        G, R = sampled_gram(problem.X, problem.y, idx_j)
+        new = fista_update(G, R, state, t, problem.lam, use_kernel)
+        return new, (new.w if collect_history else None)
+
+    state, hist = jax.lax.scan(step, init_state(w0), idx)
+    return (state.w, hist) if collect_history else state.w
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def fista_reference(problem: LassoProblem, iters: int = 2000, step_size=None):
+    """Deterministic full-batch FISTA — the 'TFOCS' stand-in oracle (b=1,
+    no sampling). Used to compute the paper's relative solution error."""
+    d, n = problem.X.shape
+    t = lipschitz_step(problem.X) if step_size is None else step_size
+    G = problem.X @ problem.X.T / n
+    R = problem.X @ problem.y / n
+
+    def step(state, j):
+        w_prev, w = state
+        mom = fista_momentum(j)
+        v = w + mom * (w - w_prev)
+        w_new = soft_threshold(v - t * (G @ v - R), problem.lam * t)
+        return (w, w_new), None
+
+    (_, w), _ = jax.lax.scan(step, (jnp.zeros((d,)), jnp.zeros((d,))),
+                             jnp.arange(1, iters + 1))
+    return w

@@ -1,0 +1,33 @@
+"""Classical stochastic proximal Newton method, SPNM (paper Algorithm II)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import LassoProblem, SolverConfig
+from repro.core.sampling import sample_index_batch
+from repro.core.gram import sampled_gram
+from repro.core.update_rules import init_state, pnm_update
+from repro.core.fista import _resolve_step
+
+
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "use_kernel"))
+def spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+         w0=None, collect_history: bool = False, use_kernel: bool = False):
+    """Stochastic proximal Newton: per iteration, sample a Gram block H_j and
+    solve the quadratic subproblem with Q inner ISTA steps (warm-started)."""
+    d, n = problem.X.shape
+    m = max(int(cfg.b * n), 1)
+    t = _resolve_step(problem, cfg)
+    w0 = jnp.zeros((d,), problem.X.dtype) if w0 is None else w0
+    idx = sample_index_batch(key, cfg.T, n, m, cfg.with_replacement)
+
+    def step(state, idx_j):
+        G, R = sampled_gram(problem.X, problem.y, idx_j)
+        new = pnm_update(G, R, state, t, problem.lam, cfg.Q, use_kernel)
+        return new, (new.w if collect_history else None)
+
+    state, hist = jax.lax.scan(step, init_state(w0), idx)
+    return (state.w, hist) if collect_history else state.w

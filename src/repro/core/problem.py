@@ -1,0 +1,86 @@
+"""Problem and solver configuration for L1-regularized least squares (LASSO).
+
+    min_w  f(w) + g(w),   f(w) = (1/2n) ||X^T w - y||^2,   g(w) = lam ||w||_1
+
+X is (d, n): rows are features, columns are samples (paper's convention, n >> d).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LassoProblem:
+    """The LASSO problem instance. X: (d, n) features x samples; y: (n,)."""
+    X: jax.Array
+    y: jax.Array
+    lam: float = dataclasses.field(metadata=dict(static=True), default=0.1)
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Solver hyper-parameters shared by all four algorithms.
+
+    Attributes:
+      T: total outer iterations (classical) / total effective iterations (CA).
+      k: communication-avoiding step parameter; collectives fire every k iters.
+      b: sampling rate in (0, 1]; m = floor(b*n) columns drawn per iteration.
+      Q: inner first-order iterations for the proximal-Newton subproblem.
+      step_size: fixed step t; if None, 1/L with L = eigmax((1/n) X X^T) via
+        power iteration (computed once, outside the iteration loop).
+      with_replacement: paper's I_j (i.i.d. uniform columns) samples with
+        replacement; kept as a flag for ablations.
+    """
+    T: int = 128
+    k: int = 8
+    b: float = 0.1
+    Q: int = 5
+    step_size: Optional[float] = None
+    with_replacement: bool = True
+    power_iters: int = 50
+
+    def __post_init__(self):
+        if self.T % self.k != 0:
+            raise ValueError(f"T={self.T} must be a multiple of k={self.k}")
+        if not (0.0 < self.b <= 1.0):
+            raise ValueError(f"sampling rate b={self.b} must be in (0, 1]")
+
+
+def lasso_objective(problem: LassoProblem, w: jax.Array) -> jax.Array:
+    """Full-batch objective F(w) = (1/2n)||X^T w - y||^2 + lam ||w||_1."""
+    r = problem.X.T @ w - problem.y
+    return 0.5 / problem.n * jnp.vdot(r, r) + problem.lam * jnp.sum(jnp.abs(w))
+
+
+def lipschitz_step(X: jax.Array, iters: int = 100, key=None,
+                   safety: float = 1.05) -> jax.Array:
+    """t = 1/(safety*L), L = eigmax((1/n) X X^T) by power iteration.
+
+    The safety factor covers slow power-iteration convergence under small
+    eigengaps (FISTA requires t <= 1/L; underestimating L diverges)."""
+    d, n = X.shape
+    G = (X @ X.T) / n
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    v = jax.random.normal(key, (d,), dtype=G.dtype)
+
+    def body(_, v):
+        v = G @ v
+        return v / jnp.linalg.norm(v)
+
+    v = jax.lax.fori_loop(0, iters, body, v / jnp.linalg.norm(v))
+    L = jnp.vdot(v, G @ v)
+    return 1.0 / (safety * L)

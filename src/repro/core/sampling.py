@@ -1,0 +1,31 @@
+"""Randomized column sampling (the paper's I_j matrices).
+
+I_j in R^{n x m} has one nonzero per column: applying X @ I_j selects m columns
+of X uniformly at random. We never materialize I_j; we sample indices and gather.
+The batch variant draws k independent index sets at once — this independence is
+exactly what makes the k-step unrolling (and hence communication avoidance)
+possible (paper §IV-B).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_indices(key: jax.Array, n: int, m: int, with_replacement: bool = True) -> jax.Array:
+    """Indices of m columns drawn uniformly from [0, n)."""
+    if with_replacement:
+        return jax.random.randint(key, (m,), 0, n)
+    return jax.random.permutation(key, n)[:m]
+
+
+def sample_index_batch(key: jax.Array, k: int, n: int, m: int,
+                       with_replacement: bool = True) -> jax.Array:
+    """(k, m) independent index sets — one per unrolled iteration."""
+    keys = jax.random.split(key, k)
+    return jax.vmap(lambda kk: sample_indices(kk, n, m, with_replacement))(keys)
+
+
+def sample_columns(X: jax.Array, y: jax.Array, idx: jax.Array):
+    """Gather sampled columns: Xs = X @ I_j (d, m), ys = I_j^T y (m,)."""
+    return jnp.take(X, idx, axis=1), jnp.take(y, idx, axis=0)

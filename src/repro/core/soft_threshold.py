@@ -1,0 +1,21 @@
+"""Soft-thresholding operator S_lambda — the prox of lambda*||.||_1 (paper eq. 7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_threshold(w: jax.Array, thresh) -> jax.Array:
+    """[S_lam(w)]_i = sign(w_i) * max(|w_i| - lam, 0), elementwise."""
+    return jnp.sign(w) * jnp.maximum(jnp.abs(w) - thresh, 0.0)
+
+
+def prox_grad_step(w: jax.Array, grad: jax.Array, t, lam) -> jax.Array:
+    """One generalized (proximal) gradient step: S_{lam*t}(w - t*grad) (eq. 6)."""
+    return soft_threshold(w - t * grad, lam * t)
+
+
+def fista_momentum(j: jax.Array):
+    """Paper's momentum coefficient (j-2)/j (eq. 9), zero-clamped for j < 2."""
+    jf = j.astype(jnp.float32) if hasattr(j, "astype") else jnp.float32(j)
+    return jnp.maximum((jf - 2.0) / jnp.maximum(jf, 1.0), 0.0)

@@ -1,0 +1,67 @@
+"""Shared per-iteration update rules.
+
+CA and classical solvers call the *same* functions on (G_j, R_j) — this is what
+makes the k-step reformulation arithmetically identical to the classical
+algorithm (paper §IV-A), a property asserted bitwise in tests/test_core.py.
+
+Note on gradient evaluation point: the paper's Algorithm I/III pseudocode is
+ambiguous (it writes grad at w_{j-1} but applies the step at v_j). We follow
+textbook FISTA (Beck & Teboulle 2009) and evaluate the gradient at the
+extrapolated point v_j — the Gram linearity grad = G v - R makes this free.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.soft_threshold import soft_threshold, fista_momentum
+
+
+class IterState(NamedTuple):
+    w_prev: jax.Array   # w_{j-2}
+    w: jax.Array        # w_{j-1}
+    j: jax.Array        # iteration counter (starts at 1)
+
+
+def init_state(w0: jax.Array) -> IterState:
+    return IterState(w_prev=w0, w=w0, j=jnp.asarray(1, jnp.int32))
+
+
+def fista_update(G: jax.Array, R: jax.Array, state: IterState,
+                 t, lam, use_kernel: bool = False) -> IterState:
+    """One FISTA step with sampled-Gram gradient:  (paper Alg. III lines 9-13)
+
+        v   = w + (j-2)/j * (w - w_prev)
+        w+  = S_{lam*t}( v - t * (G v - R) )
+    """
+    mom = fista_momentum(state.j)
+    v = state.w + mom * (state.w - state.w_prev)
+    if use_kernel:
+        from repro.kernels.prox_step import ops as prox_ops
+        w_new = prox_ops.prox_step(G, R, v, t, lam)
+    else:
+        grad = G @ v - R
+        w_new = soft_threshold(v - t * grad, lam * t)
+    return IterState(w_prev=state.w, w=w_new, j=state.j + 1)
+
+
+def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
+               t, lam, Q: int, use_kernel: bool = False) -> IterState:
+    """One proximal-Newton step (paper Alg. IV lines 9-17).
+
+    The quadratic subproblem
+        argmin_z grad^T (z-w) + 1/2 (z-w)^T H (z-w) + lam ||z||_1,
+    with H = G_j and grad = G_j w - R_j, has subproblem gradient
+    grad + H(z - w) = G z - R, so Q inner ISTA iterations are
+        z <- S_{lam*t}( z - t (G z - R) ),   z_0 = w   (warm start).
+    """
+    if use_kernel:
+        from repro.kernels.prox_step import ops as prox_ops
+        z = prox_ops.prox_loop(G, R, state.w, t, lam, Q)
+    else:
+        def body(q, z):
+            return soft_threshold(z - t * (G @ z - R), lam * t)
+        z = jax.lax.fori_loop(0, Q, body, state.w)
+    return IterState(w_prev=state.w, w=z, j=state.j + 1)

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    make_lasso_data, make_dataset_like, make_token_batch, TokenStream,
+    PAPER_DATASETS,
+)
+
+__all__ = ["make_lasso_data", "make_dataset_like", "make_token_batch",
+           "TokenStream", "PAPER_DATASETS"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots + LM substrate.
+
+Each kernel package has:
+  kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd public wrapper with padding/dispatch + interpret fallback
+  ref.py     pure-jnp oracle used by tests/benchmarks
+
+On this CPU container all kernels execute via interpret=True; the BlockSpecs
+are written for TPU v5e VMEM (16 MiB/core) and MXU (128x128) alignment.
+"""

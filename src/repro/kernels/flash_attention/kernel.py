@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: FlashAttention-style online-softmax GQA attention.
+
+TPU adaptation (vs. the CUDA original): no warp-level shuffles or shared-mem
+banking — instead, (bq x d) query tiles stay VMEM-resident while (bk x d)
+key/value tiles stream HBM->VMEM along the innermost grid dimension; the MXU
+consumes (bq x bk) score tiles, and the online-softmax running max/denominator
+live in VMEM scratch across the kv sweep. Causal block-skipping prunes the
+upper-triangle grid cells with pl.when (no wasted MXU issue slots).
+
+Grid: (B*Hq, Sq/bq, Skv/bk) — kv innermost, sequential; output tile revisited
+consecutively, accumulated in fp32 scratch, written once on the last kv block.
+VMEM: (bq+2*bk)*d*4B + bq*bk*4B ≈ 1.3 MiB at bq=bk=512, d=128.
+GQA is expressed in the BlockSpec index maps (q head h reads kv head
+h // group) — no KV replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  kv_blocks: int, kv_len: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal block pruning: skip blocks strictly above the masked diagonal.
+    # Global query position = iq*bq + row + q_offset (aligns decode windows).
+    if causal:
+        run = (ik * bk) <= (iq * bq + bq - 1 + q_offset)
+    else:
+        run = (ik * bk) < kv_len  # always true structurally; keeps types uniform
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            qpos = iq * bq + q_offset + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        # Mask the zero-padded tail of the kv axis (exactness of ops.py pad).
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)       # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0, 0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)              # fully-masked rows -> 0
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "bq", "bk", "kv_len", "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool, scale: float, bq: int, bk: int,
+                    kv_len: int, q_offset: int, interpret: bool = True):
+    """Padded flash attention. q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D); Sq % bq == 0,
+    Skv % bk == 0, D MXU-aligned (ops.py guarantees). kv_len = unpadded Skv."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    grid = (B * Hq, Sq // bq, Skv // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        kv_blocks=Skv // bk, kv_len=kv_len, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda bh, iq, ik: (bh // Hq, bh % Hq, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, iq, ik: (bh // Hq, (bh % Hq) // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, iq, ik: (bh // Hq, (bh % Hq) // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda bh, iq, ik: (bh // Hq, bh % Hq, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

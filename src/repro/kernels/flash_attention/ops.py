@@ -1,0 +1,54 @@
+"""Public wrapper for flash attention: padding (seq to block multiples, head
+dim to 128 lanes), GQA validation, interpret-mode dispatch on CPU.
+
+Zero-padding is exact: padded head-dim lanes contribute 0 to q.k and produce
+0 output lanes (sliced off); padded kv rows are masked to -inf in-kernel;
+padded q rows produce garbage rows that are sliced off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    bq: int | None = None, bk: int | None = None,
+                    interpret: bool | None = None):
+    """GQA flash attention. q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) -> (B,Hq,Sq,D).
+
+    For decode (Sq < Skv) the causal mask is right-aligned: query i attends to
+    keys [0, Skv - Sq + i].
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    if Hq % Hkv:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {Hq=} {Hkv=}")
+    scale = (D ** -0.5) if scale is None else scale
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bq = bq or min(DEFAULT_BQ, _round_up(Sq, 8))
+    bk = bk or min(DEFAULT_BK, _round_up(Skv, 8))
+
+    Dp = _round_up(D, LANE)
+    Sqp, Skvp = _round_up(Sq, bq), _round_up(Skv, bk)
+    pad4 = lambda x, s, d: jnp.pad(x, ((0, 0), (0, 0), (0, s), (0, d)))
+    qp = pad4(q, Sqp - Sq, Dp - D)
+    kp = pad4(k, Skvp - Skv, Dp - D)
+    vp = pad4(v, Skvp - Skv, Dp - D)
+
+    out = _k.flash_attention(
+        qp, kp, vp, causal=causal, scale=scale, bq=bq, bk=bk,
+        kv_len=Skv, q_offset=Skv - Sq, interpret=interpret)
+    return out[:, :, :Sq, :D]

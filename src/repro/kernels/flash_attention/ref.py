@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: exact (materialized-scores) GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q (B, Hq, S, D); k, v (B, Hkv, Skv, D); Hq % Hkv == 0. Returns (B,Hq,S,D)."""
+    B, Hq, S, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Hkv, group, S, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        # query position i (offset so the last query aligns with the last key)
+        qpos = jnp.arange(S)[:, None] + (Skv - S)
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, S, D).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Public jit'd wrapper for the sampled-Gram kernel: pads to tile multiples,
+dispatches Pallas (interpret on CPU, compiled on TPU), unpads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import kernel as _k
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bm", "interpret"))
+def gram(Xs: jax.Array, *, bd: int | None = None, bm: int | None = None,
+         interpret: bool | None = None) -> jax.Array:
+    """G = Xs @ Xs^T for arbitrary (d, m). Zero-padding the sample axis is
+    exact (padded columns contribute 0 to the outer-product sum)."""
+    d, m = Xs.shape
+    bd = bd or min(_k.DEFAULT_BD, _round_up(d, 8))
+    bm = bm or min(_k.DEFAULT_BM, _round_up(m, 128))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    dp, mp = _round_up(d, bd), _round_up(m, bm)
+    Xp = jnp.pad(Xs.astype(jnp.float32), ((0, dp - d), (0, mp - m)))
+    G = _k.gram(Xp, bd=bd, bm=bm, interpret=interpret)
+    return G[:d, :d]

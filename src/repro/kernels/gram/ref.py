@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the sampled-Gram kernel."""
+import jax.numpy as jnp
+
+
+def gram(Xs: jnp.ndarray) -> jnp.ndarray:
+    """G = Xs @ Xs^T, Xs (d, m) float32, accumulated in float32."""
+    return jnp.dot(Xs, Xs.T, preferred_element_type=jnp.float32)
+
+
+def gram_xy(Xs: jnp.ndarray, ys: jnp.ndarray):
+    """(G, R) = (Xs Xs^T, Xs ys)."""
+    return gram(Xs), jnp.dot(Xs, ys, preferred_element_type=jnp.float32)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused proximal-gradient step(s) with VMEM-resident Gram.
+
+The paper's inner loop (Alg. IV lines 13-16) runs Q ISTA iterations against a
+FIXED d x d Gram block. On TPU the win over XLA is structural: H is loaded
+HBM->VMEM once and all Q (matvec + shrink) iterations run out of VMEM with
+zero intermediate HBM traffic — the loop becomes MXU-latency-bound rather
+than HBM-bandwidth-bound. XLA's fori_loop keeps z in HBM between iterations
+(2*d*4B/iter round-trips) and cannot pin H in VMEM across iterations.
+
+Layout: vectors are (d, 1) tiles (TPU needs >=2D); the full H (d x d fp32)
+must fit VMEM => d <= ~1800 (ops.py falls back to the XLA path above that —
+the paper's d is 8..54, linear probes go to ~1k). With grid=() the default
+BlockSpec maps whole operands into VMEM, which is exactly the intent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shrink(x, thresh):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thresh, 0.0)
+
+
+def _matvec(G, z):
+    return jax.lax.dot_general(G, z, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _prox_loop_kernel(G_ref, R_ref, z_ref, scal_ref, o_ref, *, Q: int):
+    G = G_ref[...]            # (d, d), VMEM-resident across all Q iterations
+    R = R_ref[...]            # (d, 1)
+    t = scal_ref[0, 0]
+    lam_t = scal_ref[1, 0] * t
+
+    def body(q, z):
+        return _shrink(z - t * (_matvec(G, z) - R), lam_t)
+
+    o_ref[...] = jax.lax.fori_loop(0, Q, body, z_ref[...])
+
+
+def _prox_step_kernel(G_ref, R_ref, v_ref, scal_ref, o_ref):
+    t = scal_ref[0, 0]
+    lam_t = scal_ref[1, 0] * t
+    v = v_ref[...]
+    o_ref[...] = _shrink(v - t * (_matvec(G_ref[...], v) - R_ref[...]), lam_t)
+
+
+@functools.partial(jax.jit, static_argnames=("Q", "interpret"))
+def prox_loop(G: jax.Array, R: jax.Array, z0: jax.Array, scal: jax.Array,
+              *, Q: int, interpret: bool = True) -> jax.Array:
+    """z_Q after Q fused ISTA iterations. G (d,d), R/z0 (d,1), scal (2,1)=[t;lam]."""
+    d = G.shape[0]
+    return pl.pallas_call(
+        functools.partial(_prox_loop_kernel, Q=Q),
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=interpret,
+    )(G, R, z0, scal)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prox_step(G: jax.Array, R: jax.Array, v: jax.Array, scal: jax.Array,
+              *, interpret: bool = True) -> jax.Array:
+    """One fused step S_{lam t}(v - t (G v - R)). Shapes as in prox_loop."""
+    d = G.shape[0]
+    return pl.pallas_call(
+        _prox_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=interpret,
+    )(G, R, v, scal)

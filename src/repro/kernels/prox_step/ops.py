@@ -1,0 +1,45 @@
+"""Public wrappers for the fused prox kernels: shape adaptation ((d,) vectors
+-> (d,1) tiles), VMEM-fit dispatch, XLA fallback for large d."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prox_step import kernel as _k
+from repro.kernels.prox_step import ref as _ref
+
+#: fp32 Gram + vectors must fit v5e VMEM (16 MiB): d^2*4 <~ 13 MiB.
+VMEM_MAX_D = 1792
+
+
+def _prep(G, R, v, t, lam):
+    G = G.astype(jnp.float32)
+    R = R.reshape(-1, 1).astype(jnp.float32)
+    v = v.reshape(-1, 1).astype(jnp.float32)
+    scal = jnp.stack([jnp.asarray(t, jnp.float32),
+                      jnp.asarray(lam, jnp.float32)]).reshape(2, 1)
+    return G, R, v, scal
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+def prox_step(G, R, v, t, lam, interpret: bool | None = None):
+    """w+ = S_{lam*t}(v - t*(G v - R)); accepts (d,) vectors."""
+    if G.shape[0] > VMEM_MAX_D:
+        return _ref.prox_step(G, R, v, t, lam)
+    interpret = _interpret_default() if interpret is None else interpret
+    Gp, Rp, vp, scal = _prep(G, R, v, t, lam)
+    return _k.prox_step(Gp, Rp, vp, scal, interpret=interpret).reshape(v.shape)
+
+
+def prox_loop(G, R, z0, t, lam, Q: int, interpret: bool | None = None):
+    """z_Q from Q fused warm-started ISTA iterations; accepts (d,) vectors."""
+    if G.shape[0] > VMEM_MAX_D:
+        return _ref.prox_loop(G, R, z0, t, lam, Q)
+    interpret = _interpret_default() if interpret is None else interpret
+    Gp, Rp, zp, scal = _prep(G, R, z0, t, lam)
+    return _k.prox_loop(Gp, Rp, zp, scal, Q=Q, interpret=interpret).reshape(z0.shape)

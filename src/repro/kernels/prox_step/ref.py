@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused proximal-step kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def _shrink(x, thresh):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thresh, 0.0)
+
+
+def prox_step(G, R, v, t, lam):
+    """w+ = S_{lam*t}(v - t*(G v - R)): one fused FISTA interior update."""
+    return _shrink(v - t * (G @ v - R), lam * t)
+
+
+def prox_loop(G, R, z0, t, lam, Q: int):
+    """Q warm-started ISTA iterations on the proximal-Newton subproblem —
+    the paper's redundant, communication-free inner solve (Alg. IV 13-16)."""
+    def body(q, z):
+        return _shrink(z - t * (G @ z - R), lam * t)
+    return jax.lax.fori_loop(0, Q, body, z0)

@@ -1,0 +1,61 @@
+"""Public wrapper for the SSD kernel: layout adaptation from the model's
+(B,S,H,P) convention, dt folding, seq padding (exact: padded steps have
+a = 0 -> decay 1 and xdt = 0 -> no state contribution), dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as _k
+from repro.kernels.ssd import ref as _ref
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 64, h0=None,
+        interpret: bool | None = None, use_kernel: bool = True):
+    """Mamba-2 SSD. x (Bt,S,H,P); dt (Bt,S,H); A (H,); B,C (Bt,S,N).
+    Returns y (Bt,S,H,P), h_final (Bt,H,P,N)."""
+    if not use_kernel:
+        Sp = (x.shape[1] + chunk - 1) // chunk * chunk
+        pad = Sp - x.shape[1]
+        if pad:
+            x, dt = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                     for a in (x, dt))
+            B, C = (jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in (B, C))
+        y, h = _ref.ssd_chunked(x, dt, A, B, C, chunk=chunk, h0=h0)
+        return y[:, :y.shape[1] - pad] if pad else y, h
+
+    if h0 is not None:
+        raise NotImplementedError("kernel path starts from zero state; "
+                                  "pass use_kernel=False for stateful resume")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Sp = (S + chunk - 1) // chunk * chunk
+    pad = Sp - S
+
+    f32 = jnp.float32
+    xdt = (x.astype(f32) * dt[..., None].astype(f32)).transpose(0, 2, 1, 3)
+    a = (dt.astype(f32) * A[None, None, :]).transpose(0, 2, 1)[..., None]
+    Bm = B.astype(f32)[:, None]                     # (Bt, G=1, S, N)
+    Cm = C.astype(f32)[:, None]
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    y, h = _k.ssd(xdt, a, Bm, Cm, chunk=chunk, ngroups=1, interpret=interpret)
+    y = y.transpose(0, 2, 1, 3)[:, :S].astype(x.dtype)
+    return y, h
+
+
+def ssd_decode_step(x_t, dt_t, A, B_t, C_t, h):
+    """O(1) single-token SSD decode: x_t (Bt,H,P); dt_t (Bt,H); B_t,C_t (Bt,N);
+    h (Bt,H,P,N). Returns y_t (Bt,H,P), h_new. This is why SSM archs run the
+    long_500k cell: decode state is independent of context length."""
+    decay = jnp.exp(dt_t * A[None, :])                           # (Bt,H)
+    upd = (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+    h = decay[..., None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+    return y.astype(x_t.dtype), h

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) operator.
+
+Per head h with state h_t in R^{P x N} (P = head dim, N = ssm state dim):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = h_t @ C_t + D * x_t          (D-skip applied by the caller)
+
+``ssd_sequential`` is the exact step-by-step oracle; ``ssd_chunked`` is the
+production block-form (identical math, chunk-parallel intra + tiny inter-chunk
+scan) used by the model and mirrored by the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, dt, A, B, C, h0=None):
+    """Oracle. x (Bt,S,H,P); dt (Bt,S,H); A (H,); B,C (Bt,S,N) (1 group).
+
+    Returns y (Bt,S,H,P), h_final (Bt,H,P,N)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    h = jnp.zeros((Bt, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, Bt_, Ct_ = inp           # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        decay = jnp.exp(dtt * A[None, :])                       # (Bt,H)
+        inp_term = (dtt[..., None] * xt)[..., None] * Bt_[:, None, None, :]
+        h = decay[..., None, None] * h + inp_term               # (Bt,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct_)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 64, h0=None):
+    """Block form. Same signature/semantics as ssd_sequential.
+
+    Within a chunk (cs = inclusive cumsum of a_t = dt_t * A):
+      y_t = exp(cs_t) * (C_t . h0)  +  sum_{s<=t} exp(cs_t - cs_s) (C_t.B_s) dt_s x_s
+      h'  = exp(cs_L) * h0          +  sum_s    exp(cs_L - cs_s) dt_s (x_s outer B_s)
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, "caller pads seq to a chunk multiple"
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xdt = (x * dt[..., None]).astype(f32)               # dt folded into x
+    a = (dt.astype(f32) * A[None, None, :])             # (Bt,S,H) log-decay
+    # chunk views
+    xc = xdt.reshape(Bt, nc, chunk, H, P)
+    ac = a.reshape(Bt, nc, chunk, H)
+    Bc = B.reshape(Bt, nc, chunk, N).astype(f32)
+    Cc = C.reshape(Bt, nc, chunk, N).astype(f32)
+
+    cs = jnp.cumsum(ac, axis=2)                          # (Bt,nc,L,H)
+    seg = cs[:, :, -1:, :] - cs                          # cs_L - cs_t
+    # intra-chunk: causal decay-weighted scores, contracted against x
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)           # (Bt,nc,L,L)
+    lmat = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # cs_t - cs_s, t = dim 2
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(lmat), 0.0)  # (Bt,nc,L,L,H)
+    y_intra = jnp.einsum("bclsh,bcls,bcshp->bclhp", decay, CB, xc)
+
+    # chunk summaries: state contribution of each chunk (Bt,nc,H,P,N)
+    chunk_state = jnp.einsum("bcsh,bcshp,bcsn->bchpn", jnp.exp(seg), xc, Bc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (Bt,nc,H) total decay
+
+    # inter-chunk scan over nc (tiny: state (Bt,H,P,N))
+    h_init = jnp.zeros((Bt, H, P, N), f32) if h0 is None else h0.astype(f32)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                     # (Bt,H,P,N), (Bt,H)
+        h_in = h                                          # state entering chunk
+        h = dec[..., None, None] * h + st
+        return h, h_in
+
+    (h_final, h_ins) = jax.lax.scan(
+        scan_fn, h_init,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                     # (Bt,nc,H,P,N)
+
+    y_inter = jnp.einsum("bclh,bcln,bchpn->bclhp", jnp.exp(cs), Cc, h_ins)
+    y = (y_intra + y_inter).reshape(Bt, S, H, P).astype(x.dtype)
+    return y, h_final

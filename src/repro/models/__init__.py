@@ -1,0 +1,6 @@
+from repro.models.transformer import (
+    init_params, forward, loss_fn, init_cache, decode_step, param_count,
+)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "param_count"]

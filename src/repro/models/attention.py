@@ -1,0 +1,132 @@
+"""GQA attention: XLA-native chunked (flash-style) path for train/prefill,
+exact cached path for decode, optional Pallas kernel path.
+
+The chunked path is an online-softmax lax.scan over KV blocks — the same
+algorithm as kernels/flash_attention but expressed in XLA ops so it compiles
+on any backend (the multi-pod dry-run lowers this path; the Pallas kernel is
+the TPU execution target, validated against the same oracle).
+
+For long sequences the query axis is additionally blocked by a static python
+loop (``q_chunk``): peak score memory drops from O(S*Skv) to
+O(q_chunk*kv_chunk), and for causal self-attention each q block only scans
+the KV prefix it can see — matching FlashAttention's block-skipping FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+#: q blocks engage above this length (keeps small/smoke cases single-block)
+Q_CHUNK_DEFAULT = 2048
+KV_CHUNK_DEFAULT = 1024
+
+
+def _attn_inner(q, k, v, *, causal: bool, chunk: int, scale: float,
+                kv_valid_len, qpos_offset: int):
+    """Online-softmax over kv chunks. q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D).
+    Global query position of row i is qpos_offset + i (for causal masking)."""
+    B, S, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    chunk = min(chunk, Skv)
+    nkc = (Skv + chunk - 1) // chunk
+    pad = nkc * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    valid = jnp.asarray(Skv if kv_valid_len is None else kv_valid_len,
+                        jnp.int32)
+
+    # Operands stay bf16 (MXU-native); accumulation is fp32 via
+    # preferred_element_type. Upcasting q itself costs a full fp32
+    # activation tensor per layer AND turns every backward cotangent fp32
+    # (llama3 train_4k: -30% memory term; EXPERIMENTS.md §Perf llama it.3).
+    qg = q.reshape(B, S, Hkv, group, D)
+    qpos = jnp.arange(S, dtype=jnp.int32) + qpos_offset
+
+    kc = jnp.moveaxis(k.reshape(B, nkc, chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nkc, chunk, Hkv, D), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ic, kb, vb = inp                                   # (B,chunk,Hkv,D)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = ic * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = kpos[None, :] < valid
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, group, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, S, D), jnp.float32)
+    if nkc == 1:
+        (m, l, acc), _ = body((m0, l0, a0),
+                              (jnp.int32(0), kc[0], vc[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(nkc, dtype=jnp.int32), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out.reshape(B, Hkv * group, S, D), 1, 2)
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      chunk: int = KV_CHUNK_DEFAULT,
+                      q_chunk: Optional[int] = Q_CHUNK_DEFAULT,
+                      scale: float | None = None, kv_valid_len=None):
+    """Flash-style attention; see module docstring. Shapes (B,S,H,D)."""
+    B, S, Hq, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    off = Skv - S                                     # right-aligned queries
+
+    if q_chunk is None or S <= q_chunk:
+        return _attn_inner(q, k, v, causal=causal, chunk=chunk, scale=scale,
+                           kv_valid_len=kv_valid_len, qpos_offset=off)
+
+    assert S % q_chunk == 0, "callers pad seq to the q-chunk multiple"
+    outs = []
+    for i in range(0, S, q_chunk):
+        qb = q[:, i:i + q_chunk]
+        if causal and kv_valid_len is None:
+            # static prefix: this q block sees keys [0, off + i + q_chunk)
+            kv_end = min(-(-(off + i + q_chunk) // chunk) * chunk, Skv)
+        else:
+            kv_end = Skv
+        outs.append(_attn_inner(
+            qb, k[:, :kv_end], v[:, :kv_end], causal=causal, chunk=chunk,
+            scale=scale, kv_valid_len=kv_valid_len, qpos_offset=off + i))
+    return jnp.concatenate(outs, axis=1)
+
+
+def pallas_attention(q, k, v, *, causal: bool = True, scale=None,
+                     kv_valid_len=None, chunk: int = KV_CHUNK_DEFAULT,
+                     q_chunk=None):
+    """Pallas-kernel path (interpret on CPU). Same (B,S,H,D) layout."""
+    from repro.kernels.flash_attention import ops as fa
+    if kv_valid_len is not None:
+        # the kernel masks by static kv_len; dynamic cache fill uses XLA path
+        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                 scale=scale, kv_valid_len=kv_valid_len)
+    o = fa.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=causal, scale=scale)
+    return o.transpose(0, 2, 1, 3)
+
+
+def attention_fn(use_pallas: bool):
+    return pallas_attention if use_pallas else chunked_attention

@@ -1,0 +1,183 @@
+"""Transformer blocks: GQA attention block (with KV cache), dense/MoE blocks,
+and the Zamba2-style hybrid superblock built from Mamba2 + shared attention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (rms_norm, apply_rope, apply_mrope, dense_init)
+from repro.models.attention import chunked_attention, pallas_attention
+from repro.models.mlp import init_swiglu, swiglu
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+def _tp_size(constrain) -> Optional[int]:
+    """Model-axis size behind a Rules.constrain bound method (None off-mesh)."""
+    rules = getattr(constrain, "__self__", None)
+    if rules is None or getattr(rules, "tp", None) is None:
+        return None
+    return rules.mesh.shape[rules.tp]
+
+
+def _kv_factorizes(n_kv: int, group: int, tp: int) -> bool:
+    """True if GSPMD can tile (n_kv x group) q-heads exactly onto tp shards
+    without padding — in which case the flat projection constraint suffices
+    and forcing a padded kv-head tiling only hurts (llama kv=8 on tp=16:
+    collective term 3.2 s -> 20 s). When no factorization exists (phi3 10x4,
+    qwen2-vl 2x6 on tp=16) GSPMD collapses to a 2-way attention split unless
+    we pad the kv-head axis explicitly (phi3 prefill: 3.6x memory-term win).
+    See EXPERIMENTS.md §Perf phi3 iterations 1-2."""
+    for a in range(1, n_kv + 1):
+        if n_kv % a == 0 and tp % a == 0:
+            rest = tp // a
+            if rest <= group and group % rest == 0:
+                return True
+    # padding n_kv up to tp costs tp/n_kv x KV memory/compute — worth it for
+    # phi3 (10 -> 16, 1.6x) but not for tiny-kv archs (qwen2-vl 2 -> 16, 8x:
+    # measured 10x collective regression). Cap the acceptable padding at 2x.
+    if tp / n_kv > 2:
+        return True
+    return False
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return dict(
+        wq=dense_init(ks[0], (d, n_heads * head_dim), dtype=dtype),
+        wk=dense_init(ks[1], (d, n_kv * head_dim), dtype=dtype),
+        wv=dense_init(ks[2], (d, n_kv * head_dim), dtype=dtype),
+        wo=dense_init(ks[3], (n_heads * head_dim, d), dtype=dtype),
+    )
+
+
+def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
+                 positions=None, mrope_pos=None, rope_theta: float = 1e4,
+                 causal: bool = True, cache: Optional[dict] = None,
+                 cache_pos=None, kv_override=None, constrain=lambda x, s: x,
+                 use_pallas: bool = False, attn_chunk: int = 1024):
+    """GQA attention. x (B,S,d).
+
+    cache: dict(k=(B,Smax,Hkv,Dh), v=...) updated at cache_pos (decode).
+    kv_override: (k, v) tuple for cross-attention (whisper decoder).
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    group = n_heads // max(n_kv, 1)
+    tp = _tp_size(constrain)
+    pad_kv = tp is not None and tp > 1 and not _kv_factorizes(n_kv, group, tp)
+
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    # 4D head-axis constraint (see _kv_factorizes): for tp-indivisible head
+    # layouts GSPMD otherwise collapses attention to a 2-way split.
+    q = q.reshape(B, S, n_heads, head_dim)
+    q = constrain(q, ("batch", None, "tp", None))
+
+    if kv_override is None:
+        k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+        if pad_kv:
+            k = constrain(k.reshape(B, S, n_kv, head_dim),
+                          ("batch", None, "tp", None))
+            v = constrain(v.reshape(B, S, n_kv, head_dim),
+                          ("batch", None, "tp", None))
+        else:
+            k = constrain(k, ("batch", None, "tp")).reshape(
+                B, S, n_kv, head_dim)
+            v = constrain(v, ("batch", None, "tp")).reshape(
+                B, S, n_kv, head_dim)
+        if mrope_pos is not None:
+            q = apply_mrope(q, mrope_pos, theta=rope_theta)
+            k = apply_mrope(k, mrope_pos, theta=rope_theta)
+        elif positions is not None:
+            q = apply_rope(q, positions, theta=rope_theta)
+            k = apply_rope(k, positions, theta=rope_theta)
+    else:
+        k, v = kv_override
+
+    new_cache = cache
+    kv_valid = None
+    if cache is not None:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = dict(k=k, v=v)
+        kv_valid = cache_pos + S
+        causal = False if S == 1 else causal    # single query: mask via kv_valid
+
+    attn = pallas_attention if use_pallas else chunked_attention
+    o = attn(q, k, v, causal=causal, chunk=attn_chunk, kv_valid_len=kv_valid)
+    o = o.reshape(B, S, n_heads * head_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
+    return constrain(out, ("batch", None, None)), new_cache
+
+
+def init_attn_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                    dtype=jnp.bfloat16):
+    z = jnp.zeros((batch, max_len, n_kv, head_dim), dtype)
+    return dict(k=z, v=z)
+
+
+# ---------------------------------------------------------------------------
+# Decoder blocks (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def init_dense_block(key, cfg, dtype=jnp.float32):
+    ka, km, kn = jax.random.split(key, 3)
+    return dict(
+        ln1=jnp.ones((cfg.d_model,), dtype),
+        attn=init_attn(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, dtype),
+        ln2=jnp.ones((cfg.d_model,), dtype),
+        mlp=init_swiglu(km, cfg.d_model, cfg.d_ff, dtype),
+    )
+
+
+def dense_block(params, x, cfg, *, pos_info, cache=None, cache_pos=None,
+                constrain=lambda x, s: x, use_pallas=False):
+    h, new_cache = attn_forward(
+        params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        positions=pos_info.get("positions"), mrope_pos=pos_info.get("mrope"),
+        rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
+        constrain=constrain, use_pallas=use_pallas)
+    x = x + h
+    x = x + swiglu(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps),
+                   constrain)
+    return x, new_cache
+
+
+def init_moe_block(key, cfg, dtype=jnp.float32):
+    ka, km, kn = jax.random.split(key, 3)
+    shared_ff = cfg.moe_d_ff * cfg.n_shared_experts
+    return dict(
+        ln1=jnp.ones((cfg.d_model,), dtype),
+        attn=init_attn(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, dtype),
+        ln2=jnp.ones((cfg.d_model,), dtype),
+        moe=init_moe(km, cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                     cfg.n_shared_experts, shared_ff, dtype),
+    )
+
+
+def moe_block(params, x, cfg, *, pos_info, cache=None, cache_pos=None,
+              constrain=lambda x, s: x, use_pallas=False):
+    h, new_cache = attn_forward(
+        params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        positions=pos_info.get("positions"), mrope_pos=pos_info.get("mrope"),
+        rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
+        constrain=constrain, use_pallas=use_pallas)
+    x = x + h
+    m, aux = moe_ffn(params["moe"], rms_norm(x, params["ln2"], cfg.norm_eps),
+                     top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                     constrain=constrain)
+    return x + m, new_cache, aux

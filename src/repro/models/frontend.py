@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] specify the
+transformer backbone only; input_specs() provides precomputed frame/patch
+embeddings). This module supplies the position bookkeeping those stubs need.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mrope_positions(n_patches: int, text_len: int, batch: int,
+                    grid_w: int | None = None):
+    """Qwen2-VL M-RoPE (t, h, w) position streams for a [vision | text] seq.
+
+    Vision patches: t=0, (h, w) from the patch grid. Text tokens: all three
+    streams advance together starting after the vision span. Returns
+    (3, B, n_patches + text_len) int32.
+    """
+    if grid_w is None:
+        grid_w = max(int(n_patches ** 0.5), 1)
+    p = jnp.arange(n_patches, dtype=jnp.int32)
+    vis_t = jnp.zeros_like(p)
+    vis_h = p // grid_w
+    vis_w = p % grid_w
+    start = jnp.int32(max((n_patches + grid_w - 1) // grid_w, grid_w))
+    t = jnp.arange(text_len, dtype=jnp.int32) + start
+    pos = jnp.stack([
+        jnp.concatenate([vis_t, t]),
+        jnp.concatenate([vis_h, t]),
+        jnp.concatenate([vis_w, t]),
+    ])                                                   # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, pos.shape[-1]))

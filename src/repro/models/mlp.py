@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_swiglu(key, d: int, ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        w_gate=dense_init(k1, (d, ff), dtype=dtype),
+        w_up=dense_init(k2, (d, ff), dtype=dtype),
+        w_down=dense_init(k3, (ff, d), dtype=dtype),
+    )
+
+
+def swiglu(params, x, constrain=lambda x, spec: x):
+    h = constrain(jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype)),
+                  ("batch", None, "tp"))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+    return constrain(out, ("batch", None, None))
+
+
+def init_gelu_mlp(key, d: int, ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return dict(
+        w_in=dense_init(k1, (d, ff), dtype=dtype),
+        b_in=jnp.zeros((ff,), dtype),
+        w_out=dense_init(k2, (ff, d), dtype=dtype),
+        b_out=jnp.zeros((d,), dtype),
+    )
+
+
+def gelu_mlp(params, x, constrain=lambda x, spec: x):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    h = constrain(h + params["b_in"].astype(x.dtype), ("batch", None, "tp"))
+    h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+    return constrain(out + params["b_out"].astype(x.dtype), ("batch", None, None))

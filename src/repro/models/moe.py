@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity dropping,
+shared experts (DeepSeek-MoE style), expert-parallel sharding over the
+``model`` mesh axis.
+
+Dispatch/combine use scatter/gather against an (E, C, d) expert buffer — the
+GSPMD-friendly formulation: tokens stay sharded over the data axes, the
+buffer is constrained to experts-over-model so XLA materializes the dispatch
+as an all-to-all style reshard rather than a full all-gather. Router runs in
+fp32 (standard practice for stability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.mlp import init_swiglu, swiglu
+
+
+def init_moe(key, d: int, moe_ff: int, n_experts: int, n_shared: int,
+             shared_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    params = dict(
+        router=dense_init(ks[0], (d, n_experts), dtype=dtype),
+        # stacked expert weights (E, d, ff) / (E, ff, d)
+        w_gate=dense_init(ks[1], (n_experts, d, moe_ff), in_axis=1, dtype=dtype),
+        w_up=dense_init(ks[2], (n_experts, d, moe_ff), in_axis=1, dtype=dtype),
+        w_down=dense_init(ks[3], (n_experts, moe_ff, d), in_axis=1, dtype=dtype),
+    )
+    if n_shared:
+        params["shared"] = init_swiglu(ks[4], d, shared_ff, dtype)
+    return params
+
+
+@jax.custom_vjp
+def _combine(ye, sel, pos, w):
+    """out[b,s] = sum_k w[b,s,k] * ye[b, sel[b,s,k], pos[b,s,k]]."""
+    def row(ye_r, sel_r, pos_r, w_r):
+        return jnp.einsum("skd,sk->sd", ye_r[sel_r, pos_r], w_r)
+    return jax.vmap(row)(ye, sel, pos, w)
+
+
+def _combine_fwd(ye, sel, pos, w):
+    return _combine(ye, sel, pos, w), (ye, sel, pos, w)
+
+
+def _combine_bwd(res, dout):
+    ye, sel, pos, w = res
+
+    def g_ye_row(d_r, sel_r, pos_r, w_r):
+        upd = d_r[:, None, :] * w_r[..., None]                  # (S,k,d)
+        return jnp.zeros(ye.shape[1:], dout.dtype).at[sel_r, pos_r].add(
+            upd, mode="drop")
+
+    def g_w_row(ye_r, sel_r, pos_r, d_r):
+        return jnp.einsum("skd,sd->sk", ye_r[sel_r, pos_r], d_r)
+
+    g_ye = jax.vmap(g_ye_row)(dout, sel, pos, w)
+    g_w = jax.vmap(g_w_row)(ye, sel, pos, dout)
+    return g_ye, None, None, g_w
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_ffn(params, x, *, top_k: int, capacity_factor: float = 1.25,
+            constrain=lambda x, spec: x):
+    """x (B, S, d) -> (B, S, d), plus the load-balance aux loss.
+
+    Each batch row is a routing group; capacity C = ceil(S*top_k/E * cf).
+    Dropped tokens (over capacity) fall back to the shared experts/residual.
+    """
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    C = max(int(S * top_k / E * capacity_factor), 4)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
+    weights, sel = jax.lax.top_k(gates, top_k)                  # (B,S,k)
+    weights = weights / jnp.maximum(
+        weights.sum(-1, keepdims=True), 1e-9)                   # renormalize
+
+    # position of each (token, slot) within its expert's capacity buffer
+    oh = jax.nn.one_hot(sel, E, dtype=jnp.int32)                # (B,S,k,E)
+    flat = oh.reshape(B, S * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                       # pre-count
+    pos_tok = (pos * flat).sum(-1).reshape(B, S, top_k)         # (B,S,k)
+    keep = pos_tok < C                                          # capacity mask
+
+    # dispatch: scatter tokens into the expert buffer (B, E, C, d).
+    # vmap over the batch row makes the scatter/gather carry explicit
+    # operand-batching dims, which GSPMD partitions along the data axes —
+    # without it the scatter runs batch-replicated and the combine gather
+    # lowers to a full-batch fp32 all-reduce per layer (measured 16x worse
+    # collective volume; see EXPERIMENTS.md §Perf deepseek iteration 1).
+    pos_clip = jnp.where(keep, pos_tok, C - 1)                  # drops collide
+    src = jnp.where(keep[..., None], x[:, :, None, :], 0.0).astype(x.dtype)
+
+    def dispatch_row(sel_r, pos_r, src_r):
+        buf_r = jnp.zeros((E, C, d), x.dtype)
+        return buf_r.at[sel_r, pos_r].add(src_r, mode="drop")
+
+    buf = jax.vmap(dispatch_row)(sel, pos_clip, src)            # (B,E,C,d)
+    buf = constrain(buf, ("batch", "tp", None, None))           # EP reshard
+
+    # expert SwiGLU on the buffer
+    wg, wu, wd = (params[k].astype(x.dtype) for k in ("w_gate", "w_up", "w_down"))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg))
+    h = h * jnp.einsum("becd,edf->becf", buf, wu)
+    ye = jnp.einsum("becf,efd->becd", h, wd)                    # (B,E,C,d)
+    # all-gather ye over the expert (model) axis HERE, in bf16: the combine
+    # gather below then stays shard-local. Left expert-sharded, GSPMD
+    # implements the gather as replicate+all-reduce of fp32 per-slot tensors
+    # (measured 7.5x more collective volume).
+    ye = constrain(ye, ("batch", None, None, None))
+
+    # combine: gather each slot's output, weight and sum over k INSIDE the
+    # vmapped row function — the psum over the expert (model) axis then
+    # happens on the summed (S, d) bf16 tensor instead of the per-slot fp32
+    # (S, k, d) one. _combine's custom VJP makes the backward the mirror
+    # image of the forward dispatch (vmap scatter with batching dims) —
+    # without it GSPMD all-reduces full per-slot fp32 gradients per layer.
+    wk = jnp.where(keep, weights, 0.0).astype(x.dtype)          # (B,S,k)
+    out = _combine(ye, sel, pos_clip, wk)
+    out = constrain(out, ("batch", None, None))
+
+    if "shared" in params:
+        out = out + swiglu(params["shared"], x, constrain)
+
+    # GShard load-balance aux loss: E * sum_e f_e * p_e
+    frac = (oh.sum(axis=2).reshape(B * S, E).mean(0)).astype(jnp.float32)
+    prob = gates.reshape(B * S, E).mean(0)
+    aux = E * jnp.sum(frac * prob)
+    return out, aux

@@ -1,0 +1,122 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Layout follows the reference implementation: a fused input projection produces
+[z | x | B | C | dt]; (x|B|C) pass through a short causal depthwise conv; the
+SSD scan runs per head with scalar decay exp(dt*A); output is gated by silu(z),
+RMS-normed and projected back. Decode keeps an O(1) state: (conv window,
+SSM state) — context length never enters decode cost, which is why SSM archs
+run the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.kernels.ssd import ops as ssd_ops
+
+
+def mamba2_dims(d_model: int, cfg):
+    d_inner = cfg.ssm_expand * d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    proj = 2 * d_inner + 2 * N + H          # z, x, B, C, dt
+    return d_inner, H, N, conv_ch, proj
+
+
+def init_mamba2(key, d_model: int, cfg, dtype=jnp.float32):
+    d_inner, H, N, conv_ch, proj = mamba2_dims(d_model, cfg)
+    ks = jax.random.split(key, 4)
+    return dict(
+        in_proj=dense_init(ks[0], (d_model, proj), dtype=dtype),
+        conv_w=dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype=dtype),
+        conv_b=jnp.zeros((conv_ch,), dtype),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        D=jnp.ones((H,), dtype),
+        dt_bias=jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), dtype) *
+                    (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)))),
+        norm=jnp.ones((d_inner,), dtype),
+        out_proj=dense_init(ks[3], (d_inner, d_model), dtype=dtype),
+    )
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over seq. xBC (B,S,ch); conv_w (K,ch).
+
+    conv_state (B,K-1,ch) prepends history (decode/chunked prefill)."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)            # (B, S+K-1, ch)
+    new_state = xp[:, -(K - 1):]
+    out = jnp.zeros_like(xBC)
+    for i in range(K):                                   # K is 4: unrolled taps
+        out = out + xp[:, i:i + xBC.shape[1]] * conv_w[i][None, None, :]
+    return jax.nn.silu(out + conv_b[None, None, :]), new_state
+
+
+def mamba2_forward(params, x, cfg, constrain=lambda x, s: x,
+                   ssd_chunk: int = 64, use_kernel: bool = False):
+    """x (B, S, d_model) -> (B, S, d_model). Training/prefill path."""
+    B, S, d_model = x.shape
+    d_inner, H, N, conv_ch, _ = mamba2_dims(d_model, cfg)
+    P = cfg.ssm_head_dim
+    w = params["in_proj"].astype(x.dtype)
+    zxbcdt = constrain(jnp.einsum("bsd,dp->bsp", x, w), ("batch", None, "tp"))
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+
+    xBC, _ = _causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                          params["conv_b"].astype(x.dtype))
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, P)
+    y, _ = ssd_ops.ssd(xh, dt, A, Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), chunk=ssd_chunk,
+                       use_kernel=use_kernel)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"].astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype))
+    return constrain(out, ("batch", None, None))
+
+
+def init_mamba2_state(batch: int, d_model: int, cfg, dtype=jnp.float32):
+    d_inner, H, N, conv_ch, _ = mamba2_dims(d_model, cfg)
+    return dict(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, H, d_inner // H, N), jnp.float32),
+    )
+
+
+def mamba2_decode_step(params, x_t, state, cfg, constrain=lambda x, s: x):
+    """One-token decode. x_t (B, 1, d_model); state from init_mamba2_state."""
+    B, _, d_model = x_t.shape
+    d_inner, H, N, conv_ch, _ = mamba2_dims(d_model, cfg)
+    P = cfg.ssm_head_dim
+    w = params["in_proj"].astype(x_t.dtype)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x_t, w)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"].astype(x_t.dtype),
+                                   params["conv_b"].astype(x_t.dtype),
+                                   conv_state=state["conv"])
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y_t, h = ssd_ops.ssd_decode_step(
+        xs[:, 0].reshape(B, H, P), dt[:, 0], A,
+        Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32),
+        state["ssm"])
+    y = y_t + params["D"].astype(y_t.dtype)[None, :, None] * xs[:, 0].reshape(B, H, P)
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"].astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x_t.dtype))
+    return out, dict(conv=conv_state, ssm=h)

@@ -1,0 +1,54 @@
+"""AdamW with fully-sharded (FSDP) fp32 master weights and moments.
+
+The optimizer state pytree mirrors the parameter pytree, so the parameter
+PartitionSpecs apply verbatim to m/v — ZeRO-3 style: every state tensor is
+sharded over ("data",) x ("model",) exactly like its parameter.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def adamw_update(params, grads, state: OptState, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """One AdamW step. lr may be a scalar or a schedule value."""
+    gnorm = jnp.sqrt(sum(jnp.vdot(g.astype(jnp.float32),
+                                  g.astype(jnp.float32))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        return (p - lr * (u + weight_decay * p)).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v), gnorm

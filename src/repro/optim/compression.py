@@ -1,0 +1,50 @@
+"""Gradient compression for the k-boundary sync (bandwidth-bound regimes).
+
+The paper shows latency drops k-fold while bandwidth is unchanged — at large
+P (their Fig. 7, p=1024 covtype point) the k-step algorithms become
+bandwidth-bound. These compressors attack that regime for the LM-training
+analogue: the delta all-reduce at the CA sync boundary.
+
+Both are error-feedback-friendly (return the residual) and jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    values: jax.Array
+    indices: jax.Array          # top-k only; empty for int8
+    scale: jax.Array
+
+
+def topk_compress(g: jax.Array, frac: float = 0.01):
+    """Keep the largest-|.| frac of entries. Returns (compressed, residual)."""
+    flat = g.reshape(-1)
+    k = max(int(flat.size * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    resid = flat.at[idx].set(0.0).reshape(g.shape)
+    return Compressed(values=kept, indices=idx,
+                      scale=jnp.ones((), g.dtype)), resid
+
+
+def topk_decompress(c: Compressed, shape) -> jax.Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), c.values.dtype)
+    return flat.at[c.indices].set(c.values * c.scale).reshape(shape)
+
+
+def int8_compress(g: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (compressed, residual)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(g.dtype) * scale
+    return Compressed(values=q, indices=jnp.zeros((0,), jnp.int32),
+                      scale=scale), g - deq
+
+
+def int8_decompress(c: Compressed, shape) -> jax.Array:
+    return (c.values.astype(jnp.float32) * c.scale).reshape(shape)

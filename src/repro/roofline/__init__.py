@@ -1,0 +1,4 @@
+from repro.roofline.hw import TPU_V5E
+from repro.roofline.analysis import analyze_compiled, roofline_terms
+
+__all__ = ["TPU_V5E", "analyze_compiled", "roofline_terms"]

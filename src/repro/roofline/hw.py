@@ -1,0 +1,22 @@
+"""Hardware constants for the roofline target (TPU v5e)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops_bf16: float     # FLOP/s
+    hbm_bw: float              # B/s
+    ici_bw_per_link: float     # B/s per link
+    ici_links: int             # usable links per chip (2D torus: 4)
+    hbm_bytes: float
+
+
+TPU_V5E = Chip(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+)

@@ -1,0 +1,14 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout import without install
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single-device host. Multi-device distribution
+# tests spawn subprocesses with their own XLA_FLAGS (see test_distributed.py).
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,169 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret=True on CPU) vs the
+pure-jnp ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gram import ops as gram_ops, ref as gram_ref
+from repro.kernels.prox_step import ops as prox_ops, ref as prox_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------- gram ----
+@pytest.mark.parametrize("d,m", [(8, 64), (54, 1000), (64, 512), (130, 777),
+                                 (256, 2048), (1, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_sweep(d, m, dtype):
+    Xs = jax.random.normal(KEY, (d, m), dtype)
+    got = gram_ops.gram(Xs)
+    want = gram_ref.gram(Xs.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=m * 2e-2 if dtype == jnp.bfloat16 else
+                               m * 1e-6)
+
+
+@pytest.mark.parametrize("bd,bm", [(8, 128), (16, 256), (128, 512)])
+def test_gram_block_shapes(bd, bm):
+    Xs = jax.random.normal(KEY, (64, 512))
+    got = gram_ops.gram(Xs, bd=min(bd, 64), bm=min(bm, 512))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(gram_ref.gram(Xs)), rtol=1e-5,
+                               atol=1e-3)
+
+
+# ------------------------------------------------------------ prox_step ----
+@pytest.mark.parametrize("d", [8, 54, 100, 512])
+@pytest.mark.parametrize("Q", [1, 3, 9])
+def test_prox_loop_sweep(d, Q):
+    ks = jax.random.split(KEY, 3)
+    G = jax.random.normal(ks[0], (d, d))
+    G = G @ G.T / d
+    R = jax.random.normal(ks[1], (d,))
+    z = jax.random.normal(ks[2], (d,))
+    got = prox_ops.prox_loop(G, R, z, 0.05, 0.02, Q)
+    want = prox_ref.prox_loop(G, R, z, 0.05, 0.02, Q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_prox_step_large_d_fallback():
+    d = prox_ops.VMEM_MAX_D + 64     # exceeds VMEM budget -> XLA path
+    ks = jax.random.split(KEY, 3)
+    G = jax.random.normal(ks[0], (d, d)) / d
+    R = jax.random.normal(ks[1], (d,))
+    v = jax.random.normal(ks[2], (d,))
+    got = prox_ops.prox_step(G, R, v, 0.1, 0.01)
+    want = prox_ref.prox_step(G, R, v, 0.1, 0.01)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ------------------------------------------------------- flash attention ---
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,D", [
+    (2, 4, 2, 64, 64, 32),
+    (1, 8, 2, 128, 128, 64),
+    (2, 4, 4, 100, 100, 80),      # unaligned seq + head dim
+    (1, 4, 2, 1, 128, 64),        # decode
+    (1, 2, 1, 96, 160, 48),       # cross-window
+    (1, 10, 5, 64, 64, 128),      # phi3-style head ratio
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Skv, D, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D))
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D))
+    got = fa_ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    want = fa_ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 32), dtype)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32), dtype)
+    v = jax.random.normal(ks[2], (1, 2, 64, 32), dtype)
+    got = fa_ops.flash_attention(q, k, v, bq=32, bk=32)
+    want = fa_ref.attention(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_xla_chunked_attention_matches_ref():
+    """The XLA train/prefill path (models.attention) against the oracle,
+    including q-chunking and GQA."""
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(KEY, 3)
+    B, Hq, Hkv, S, D = 2, 4, 2, 256, 32
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    got = chunked_attention(q, k, v, causal=True, chunk=64, q_chunk=64)
+    want = fa_ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3),
+                            causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_chunked_attention_kv_valid_len():
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(KEY, 3)
+    B, H, S, D = 1, 2, 64, 16
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    valid = 37
+    got = chunked_attention(q, k, v, causal=False, chunk=16,
+                            kv_valid_len=valid)
+    want = fa_ref.attention(q.transpose(0, 2, 1, 3),
+                            k[:, :valid].transpose(0, 2, 1, 3),
+                            v[:, :valid].transpose(0, 2, 1, 3), causal=False)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want.transpose(0, 2, 1, 3)),
+                               atol=2e-5)
+
+
+# ------------------------------------------------------------------ ssd ----
+@pytest.mark.parametrize("Bt,S,H,P,N,chunk", [
+    (2, 128, 4, 16, 8, 32),
+    (1, 100, 2, 8, 16, 32),       # padded seq
+    (2, 64, 3, 16, 4, 64),
+    (1, 256, 8, 64, 128, 64),     # mamba2-realistic head
+])
+def test_ssd_kernel_sweep(Bt, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B = jax.random.normal(ks[3], (Bt, S, N))
+    C = jax.random.normal(ks[4], (Bt, S, N))
+    y0, h0 = ssd_ref.ssd_sequential(x, dt, A, B, C)
+    y1, h1 = ssd_ops.ssd(x, dt, A, B, C, chunk=chunk)              # pallas
+    y2, h2 = ssd_ops.ssd(x, dt, A, B, C, chunk=chunk, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h0), atol=5e-4)
+
+
+def test_ssd_decode_trajectory():
+    Bt, S, H, P, N = 2, 24, 4, 16, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bt, S, N))
+    C = jax.random.normal(ks[4], (Bt, S, N))
+    y_seq, h_seq = ssd_ref.ssd_sequential(x, dt, A, B, C)
+    h = jnp.zeros((Bt, H, P, N))
+    for t in range(S):
+        y_t, h = ssd_ops.ssd_decode_step(x[:, t], dt[:, t], A, B[:, t],
+                                         C[:, t], h)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_seq), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_seq[:, -1]),
+                               atol=1e-4)
