@@ -70,10 +70,18 @@ class Checkpointer:
             os.replace(tmp, final)                    # atomic commit
             self._gc()
 
+        def _write_bg():
+            # a failed async snapshot must surface at the next wait()/save(),
+            # not vanish with the daemon thread (disk full, permissions)
+            try:
+                _write()
+            except BaseException as e:
+                self._error = e
+
         if blocking:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread = threading.Thread(target=_write_bg, daemon=True)
             self._thread.start()
 
     def wait(self):
@@ -81,7 +89,8 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
         if self._error:
-            raise self._error
+            err, self._error = self._error, None  # don't poison later saves
+            raise err
 
     def _gc(self):
         steps = sorted(self.steps())

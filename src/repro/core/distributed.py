@@ -45,16 +45,17 @@ def _local_solver(algorithm: str, cfg: SolverConfig, lam: float,
         return fista_update(G, R, state, t, lam)
 
     def solve_local(X_local, y_local, w0, t, key):
+        from repro.dist.compat import axis_size
         d, n_local = X_local.shape
         m_local = max(int(cfg.b * n_local), 1)
         # Per-shard independent draws: fold the shard's linear index into key.
         idx_lin = jnp.int32(0)
         for ax in data_axes:
-            idx_lin = idx_lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx_lin = idx_lin * axis_size(ax) + jax.lax.axis_index(ax)
         key = jax.random.fold_in(key, idx_lin)
         n_shards = 1
         for ax in data_axes:
-            n_shards *= jax.lax.axis_size(ax)
+            n_shards *= axis_size(ax)
         m_global = m_local * n_shards  # union of per-shard draws
         idx = sample_index_batch(key, cfg.T, n_local, m_local,
                                  cfg.with_replacement)

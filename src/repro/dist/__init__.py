@@ -1,0 +1,27 @@
+"""Distributed execution: sharding rules, fault-tolerant training, elastic
+remesh.
+
+Three modules, one contract:
+
+- ``sharding``        — logical-axis ``Rules`` bound to a mesh; FSDP x TP
+                        PartitionSpec inference for params and decode caches
+                        with divisibility fallback (``fit_spec``).
+- ``fault_tolerance`` — checkpoint-restore ``TrainingRunner`` with
+                        deterministic data fast-forward, injected
+                        ``FailureSource`` node failures, and the
+                        ``DeadlineGate`` straggler quorum.
+- ``elastic``         — shrink the mesh after failures while preserving the
+                        model axis (``remesh`` / ``largest_mesh_shape``).
+"""
+from repro.dist.sharding import (Rules, make_rules, fit_spec, param_specs,
+                                 cache_specs, param_shardings, cache_shardings)
+from repro.dist.fault_tolerance import (TrainingRunner, FailureSource,
+                                        DeadlineGate, NodeFailure)
+from repro.dist.elastic import remesh, largest_mesh_shape
+
+__all__ = [
+    "Rules", "make_rules", "fit_spec", "param_specs", "cache_specs",
+    "param_shardings", "cache_shardings",
+    "TrainingRunner", "FailureSource", "DeadlineGate", "NodeFailure",
+    "remesh", "largest_mesh_shape",
+]

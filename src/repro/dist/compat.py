@@ -1,0 +1,63 @@
+"""jax.sharding compatibility across jax releases.
+
+Newer jax exposes ``jax.sharding.AxisType`` and accepts ``axis_types=`` on
+``Mesh`` / ``jax.make_mesh``; 0.4.x does not. Everything here degrades to the
+plain (auto-sharded) mesh on older releases, which is exactly the behaviour
+the axis_types=(Auto,)*n annotation requests on newer ones.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType  # type: ignore
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: all axes are implicitly Auto
+    class AxisType:  # minimal stand-in so call sites can still name it
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    HAS_AXIS_TYPES = False
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    return {"axis_types": (AxisType.Auto,) * n_axes} if HAS_AXIS_TYPES else {}
+
+
+def axis_size(name) -> int:
+    """Size of a named mapped axis, inside shard_map/pmap-traced code.
+
+    ``jax.lax.axis_size`` only exists on newer jax; ``psum`` of a literal 1
+    is the portable spelling (statically folded to the axis size at trace
+    time — no collective is emitted).
+    """
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def make_mesh(shape, names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    import jax
+    try:
+        return jax.make_mesh(shape, names, **_axis_kwargs(len(names)))
+    except TypeError:  # axis_types not accepted by this release
+        return jax.make_mesh(shape, names)
+
+
+def spoof_mesh(shape, names):
+    """Mesh of (possibly duplicated) host devices, for spec-only computation.
+
+    ``Mesh`` accepts any ndarray of devices, so PartitionSpec inference for a
+    512-chip production mesh runs on a 1-CPU host — nothing is ever placed on
+    a spoofed mesh.
+    """
+    import jax
+    from jax.sharding import Mesh
+    n = int(np.prod(shape))
+    devs = np.array(list(jax.devices()) * n)[:n].reshape(shape)
+    try:
+        return Mesh(devs, names, **_axis_kwargs(len(names)))
+    except TypeError:
+        return Mesh(devs, names)

@@ -1,0 +1,171 @@
+"""Fault-tolerant training: checkpoint-restore runner, failure injection,
+straggler quorum admission.
+
+The ``TrainingRunner`` owns the production training loop: it snapshots state
+to ``repro.checkpoint.Checkpointer`` every ``ckpt_every`` steps (async, atomic
+commit), and on an injected/real node failure restores the newest committed
+checkpoint, fast-forwards the data pipeline to the restored step (the data
+factory is seeded by step index, so recovery is bit-deterministic: a crashed
+run and an uninterrupted run produce identical trajectories), rebuilds the
+step function — optionally on a shrunk elastic mesh — and resumes. Restarts
+are budgeted; blowing the budget is an error, not a hang.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.dist.elastic import remesh
+
+
+class NodeFailure(RuntimeError):
+    """A (injected or detected) node failure: unwind to the restore path."""
+
+
+class FailureSource:
+    """Deterministic failure injection at global step indices.
+
+    Each scheduled failure fires exactly once — after recovery the re-executed
+    step succeeds, mirroring a real transient node loss.
+    """
+
+    def __init__(self, fail_at: Iterable[int] = ()):
+        self._pending = set(int(s) for s in fail_at)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise NodeFailure(f"injected node failure at step {step}")
+
+
+class DeadlineGate:
+    """Straggler quorum admission (async-relaxation, arXiv:1712.06047 §4).
+
+    Workers report arrival times for a sync point; the gate closes at
+    ``deadline_s`` provided at least ``quorum`` (fraction) arrived, dropping
+    stragglers from the collective. If the quorum itself is late, the gate
+    stays open until the quorum-th arrival — correctness over latency.
+    """
+
+    def __init__(self, deadline_s: float, quorum: float = 0.75):
+        if not 0.0 < quorum <= 1.0:
+            raise ValueError(f"quorum must be in (0, 1], got {quorum}")
+        self.deadline_s = float(deadline_s)
+        self.quorum = float(quorum)
+
+    def admit(self, arrivals: Sequence[float]) -> Tuple[List[int], float]:
+        """-> (admitted worker indices, wall-clock wait before closing)."""
+        n = len(arrivals)
+        if n == 0:
+            return [], 0.0
+        need = max(int(math.ceil(self.quorum * n)), 1)
+        within = [i for i, t in enumerate(arrivals) if t <= self.deadline_s]
+        if len(within) >= need:
+            if len(within) == n:  # everyone made it: close at last arrival
+                return within, max(arrivals)
+            return within, self.deadline_s
+        # quorum missed the deadline: wait for the need-th arrival
+        cutoff = sorted(arrivals)[need - 1]
+        admitted = [i for i, t in enumerate(arrivals) if t <= cutoff]
+        return admitted, cutoff
+
+
+class TrainingRunner:
+    """Checkpoint-restore training loop.
+
+    step_builder(mesh) -> (step, state_shardings|None); step(state, batch)
+    -> (state, metrics dict). data_factory(start_step) -> batch iterator
+    positioned at ``start_step`` (the deterministic fast-forward contract).
+    init_state() -> initial state pytree (used both for cold start and as the
+    restore template via eval_shape).
+    """
+
+    def __init__(self, step_builder: Callable, mesh, data_factory: Callable,
+                 init_state: Callable, ckpt_dir: str, *,
+                 ckpt_every: int = 100, keep: int = 3,
+                 failure_source: Optional[FailureSource] = None,
+                 max_restarts: int = 10, elastic: bool = False):
+        self.step_builder = step_builder
+        self.mesh = mesh
+        self.data_factory = data_factory
+        self.init_state = init_state
+        self.ckpt = Checkpointer(ckpt_dir, keep=keep)
+        self.ckpt_every = int(ckpt_every)
+        self.failure_source = failure_source
+        self.max_restarts = int(max_restarts)
+        self.elastic = elastic
+        self.restarts = 0
+        self.metrics_log: List[dict] = []
+        self._step: Optional[Callable] = None
+        self._shardings: Any = None
+
+    # ------------------------------------------------------------------ build
+    def _build(self) -> None:
+        self._step, self._shardings = self.step_builder(self.mesh)
+
+    def _init_or_restore(self) -> Tuple[Any, int]:
+        if self.ckpt.latest_step() is None:
+            state = self.init_state()
+            if self._shardings is not None:
+                state = jax.device_put(state, self._shardings)
+            return state, 0
+        template = jax.eval_shape(self.init_state)
+        state, step, _ = self.ckpt.restore(template,
+                                           shardings=self._shardings)
+        return state, step
+
+    # -------------------------------------------------------------------- run
+    def run(self, total_steps: int):
+        """Train to ``total_steps``, surviving failures; returns final state.
+
+        A final checkpoint is committed at step ``total_steps`` so a follow-on
+        job resumes exactly where this one stopped.
+        """
+        self._build()
+        state, start = self._init_or_restore()
+        while True:
+            try:
+                state = self._loop(state, start, total_steps)
+                if start < total_steps:
+                    # guard: when the restored step is already >= the target
+                    # (shorter re-run against an old dir), committing here
+                    # would overwrite the genuine earlier checkpoint with
+                    # later-step state
+                    self.ckpt.save(total_steps, state, blocking=True)
+                return state
+            except NodeFailure:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"restart budget exhausted: {self.restarts - 1} "
+                        f"restarts allowed, training keeps failing")
+                self.ckpt.wait()  # let an in-flight snapshot commit
+                if self.elastic and self.mesh is not None:
+                    self.mesh = remesh(self.mesh)
+                self._build()
+                state, start = self._init_or_restore()
+                # drop stale post-restore entries so re-executed steps appear
+                # once: the log reads as one uninterrupted trajectory
+                self.metrics_log = [m for m in self.metrics_log
+                                    if m["step"] < start]
+
+    def _loop(self, state, start: int, total_steps: int):
+        data = self.data_factory(start)
+        for step in range(start, total_steps):
+            if step % self.ckpt_every == 0:
+                # snapshot BEFORE the step: manifest step == first step to
+                # re-execute on restore (async; host fetch is synchronous so
+                # donation by the jitted step below is safe)
+                self.ckpt.save(step, state)
+            if self.failure_source is not None:
+                self.failure_source.maybe_fail(step)
+            batch = next(data)
+            state, metrics = self._step(state, batch)
+            rec = {"step": step}
+            for k, v in metrics.items():
+                rec[k] = float(v)
+            self.metrics_log.append(rec)
+        return state

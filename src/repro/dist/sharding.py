@@ -1,0 +1,233 @@
+"""Sharding rules: logical-axis constraints + FSDP/TP spec inference.
+
+``Rules`` binds a mesh to two logical axes:
+
+- ``dp`` — the data-parallel axes (``"data"``, or ``("pod", "data")`` on the
+  multi-pod mesh): batch dims and the FSDP shard dim of parameters.
+- ``tp`` — the tensor-parallel axis (``"model"``): hidden/vocab/head dims and
+  the KV-cache sequence dim (flash-decoding layout).
+
+Spec inference is shape-driven with divisibility fallback: every candidate
+spec is passed through :func:`fit_spec`, which keeps the longest prefix of
+each axis group that divides the dim and drops the rest — so the same rules
+produce valid layouts for every arch in ``repro.configs.ARCHS`` on both the
+(data=16, model=16) pod mesh and the (pod=2, data=16, model=16) DCN mesh
+(e.g. whisper's odd 51865-token vocab simply degrades to FSDP-only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.tree_util as jtu
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Leaves smaller than this stay replicated: sharding a 64 KiB tensor buys
+# nothing and costs a collective per use.
+_MIN_SHARD_BYTES_ELEMS = 1 << 16
+
+Entry = Union[str, Tuple[str, ...], None]
+
+
+def _axes_of(entry: Entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _pack(axes: Tuple[str, ...]) -> Entry:
+    if not axes:
+        return None
+    if len(axes) == 1:
+        return axes[0]
+    return tuple(axes)
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Degrade ``spec`` until it divides ``shape`` on ``mesh``.
+
+    Per dim: keep the longest prefix of the entry's axis group whose combined
+    size divides the dim; an empty prefix becomes ``None`` (replicated), a
+    1-axis prefix is unwrapped to the bare name. Dims beyond ``len(spec)``
+    are implicitly replicated; entries beyond ``len(shape)`` are dropped.
+    """
+    out = []
+    for dim, entry in zip(shape, tuple(spec)):
+        kept: Tuple[str, ...] = ()
+        size = 1
+        for ax in _axes_of(entry):
+            nxt = size * mesh.shape[ax]
+            if dim % nxt != 0:
+                break
+            kept = kept + (ax,)
+            size = nxt
+        out.append(_pack(kept))
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Mesh + logical-axis translation, shared by train/serve/dry-run."""
+    mesh: Mesh
+    dp: Entry           # data-parallel axes ("data" or ("pod", "data"))
+    tp: Optional[str]   # tensor-parallel axis ("model"), if the mesh has one
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(self.mesh.shape.values())
+
+    @property
+    def dp_size(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in _axes_of(self.dp))
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp] if self.tp else 1
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def logical_spec(self, logical) -> P:
+        """Translate a logical-axis tuple ("batch" | "tp" | None per dim)."""
+        table = {"batch": self.dp, "tp": self.tp, None: None}
+        return P(*(table.get(name) for name in logical))
+
+    def constrain(self, x, logical):
+        """with_sharding_constraint by logical axes; no-op on a 1-chip mesh.
+
+        The spec is divisibility-fitted to ``x.shape`` first, so model code
+        can annotate unconditionally (e.g. a 10-head attention on tp=16 just
+        loses the head constraint instead of failing to lower).
+        """
+        if self.n_devices <= 1:
+            return x
+        spec = fit_spec(self.logical_spec(logical), x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def make_rules(mesh: Mesh) -> Rules:
+    """Bind rules to a mesh: ``model`` (if present) is tensor-parallel, every
+    other axis is data-parallel in mesh order (``pod`` outermost)."""
+    tp = "model" if "model" in mesh.axis_names else None
+    dp_axes = tuple(a for a in mesh.axis_names if a != tp)
+    return Rules(mesh=mesh, dp=_pack(dp_axes), tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (FSDP x TP)
+# ---------------------------------------------------------------------------
+
+def _param_leaf_spec(shape: Tuple[int, ...], rules: Rules,
+                     gather_fsdp: bool) -> P:
+    """Megatron-style 2-D sharding inferred from shape alone.
+
+    The largest dim divisible by the tp size carries the model axis (ties go
+    to the later dim: output/vocab projections shard on their last dim); the
+    largest remaining dim carries the FSDP axes. Leading layer-stack dims are
+    never the largest, so scan-over-layers slicing stays local. fit_spec
+    degrades anything that doesn't divide.
+    """
+    nd = len(shape)
+    size = math.prod(shape)
+    if nd < 2 or size < _MIN_SHARD_BYTES_ELEMS or rules.n_devices <= 1:
+        return P(*([None] * nd))
+
+    # dims by (size, index) descending: biggest first, later dim wins ties
+    order = sorted(range(nd), key=lambda i: (shape[i], i), reverse=True)
+    entries: list = [None] * nd
+
+    tp_dim = None
+    if rules.tp is not None:
+        tp_sz = rules.tp_size
+        tp_dim = next((i for i in order
+                       if shape[i] >= tp_sz and shape[i] % tp_sz == 0), None)
+        if tp_dim is not None:
+            entries[tp_dim] = rules.tp
+
+    if rules.dp is not None and not gather_fsdp:
+        dp_total = rules.dp_size
+        rest = [i for i in order if i != tp_dim]
+        # prefer a dim the full dp group divides; else take the largest and
+        # let fit_spec keep whatever prefix (e.g. pod-only) still fits
+        dp_dim = next((i for i in rest
+                       if shape[i] >= dp_total and shape[i] % dp_total == 0),
+                      rest[0] if rest else None)
+        if dp_dim is not None:
+            entries[dp_dim] = rules.dp
+
+    return fit_spec(P(*entries), shape, rules.mesh)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def param_specs(params, rules: Rules, *, gather_fsdp: bool = False):
+    """PartitionSpec pytree matching ``params`` (arrays or SDS leaves).
+
+    gather_fsdp=True drops the data axes and keeps the tp axes — the layout
+    of the bf16 compute copy after the per-step parameter all-gather.
+    """
+    return jax.tree.map(
+        lambda leaf: _param_leaf_spec(tuple(leaf.shape), rules, gather_fsdp),
+        params)
+
+
+def param_shardings(params, rules: Rules, *, gather_fsdp: bool = False):
+    """NamedSharding pytree for jit in/out_shardings and device_put."""
+    return jax.tree.map(
+        lambda leaf: rules.sharding(
+            _param_leaf_spec(tuple(leaf.shape), rules, gather_fsdp)),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_spec(path, shape: Tuple[int, ...], rules: Rules) -> P:
+    """Cache layout by leaf name (trailing dims are fixed per kind):
+
+    - k/v   (..., B, S, H_kv, D_h): batch@dp, seq@tp — the flash-decoding
+            layout: each model shard owns a contiguous KV-sequence slice, so
+            decode attention all-reduces a (B, H, D_h) partial instead of
+            gathering the cache.
+    - ssm   (..., B, H, P, N):      batch@dp, heads@tp (degradable).
+    - conv  (..., B, K-1, ch):      batch@dp.
+    - everything else (pos, ...):   replicated.
+    """
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jtu.DictKey):
+            name = entry.key
+            break
+    nd = len(shape)
+    entries: list = [None] * nd
+    # k/v (seq@tp) and ssm (heads@tp) coincide positionally: both carry dp at
+    # -4 and tp at -3; only the meaning of the tp-sharded dim differs
+    if name in ("k", "v", "ssm") and nd >= 4:
+        entries[nd - 4] = rules.dp
+        entries[nd - 3] = rules.tp
+    elif name == "conv" and nd >= 3:
+        entries[nd - 3] = rules.dp
+    return fit_spec(P(*entries), shape, rules.mesh)
+
+
+def cache_specs(cache, rules: Rules):
+    """PartitionSpec pytree for a decode cache from ``init_cache``."""
+    return jtu.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(path, tuple(leaf.shape), rules),
+        cache)
+
+
+def cache_shardings(cache, rules: Rules):
+    return jtu.tree_map_with_path(
+        lambda path, leaf: rules.sharding(
+            _cache_leaf_spec(path, tuple(leaf.shape), rules)),
+        cache)

@@ -7,7 +7,8 @@ host platform to initialize first.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,8 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips across DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
@@ -27,5 +27,4 @@ def make_host_mesh():
         if n % m == 0:
             model = m
             break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))

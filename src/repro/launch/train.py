@@ -92,8 +92,12 @@ def main(argv=None):
     for m in runner.metrics_log[::args.log_every]:
         print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
               f"gnorm {m['grad_norm']:.3f}  lr {m['lr']:.2e}")
-    last = runner.metrics_log[-1]
-    print(f"step {last['step']:5d}  loss {last['loss']:.4f}  (final)")
+    if runner.metrics_log:
+        last = runner.metrics_log[-1]
+        print(f"step {last['step']:5d}  loss {last['loss']:.4f}  (final)")
+    else:
+        print(f"checkpoint in {args.ckpt_dir} already at step "
+              f"{args.steps}; nothing to do")
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({args.steps / dt:.2f} steps/s), restarts={runner.restarts}")
     return runner

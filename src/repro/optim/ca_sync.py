@@ -41,9 +41,10 @@ def ca_local_sgd_solver(loss_fn: Callable, mesh: Mesh, *, k: int, lr: float,
     axes = tuple(data_axes)
 
     def local(params, batches):
+        from repro.dist.compat import axis_size
         nshards = 1
         for ax in axes:
-            nshards *= jax.lax.axis_size(ax)
+            nshards *= axis_size(ax)
 
         def one(params, batch):
             loss, g = jax.value_and_grad(loss_fn)(params, batch)

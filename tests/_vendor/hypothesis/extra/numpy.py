@@ -1,0 +1,43 @@
+"""numpy array strategy for the fallback hypothesis."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..strategies import SearchStrategy
+
+
+def arrays(dtype, shape, *, elements=None, fill=None,
+           unique: bool = False) -> SearchStrategy:
+    """np arrays with shape drawn from an int/tuple/strategy and elements
+    drawn per entry from ``elements`` (uniform in [0, 1) when omitted)."""
+
+    def resolve_shape(rng, index):
+        s = shape
+        if isinstance(s, SearchStrategy):
+            s = s.do_draw(rng, index)
+        if isinstance(s, (int, np.integer)):
+            s = (int(s),)
+        return tuple(int(d) for d in s)
+
+    def draw_at(rng, index):
+        shp = resolve_shape(rng, index)
+        n = int(np.prod(shp)) if shp else 1
+        if elements is None:
+            vals = [rng.random() for _ in range(n)]
+        else:
+            vals = [elements.do_draw(rng, index if k == 0 else 10 ** 9)
+                    for k in range(n)]
+        return np.asarray(vals, dtype=dtype).reshape(shp)
+
+    strat = SearchStrategy(lambda rng: draw_at(rng, 10 ** 9))
+    # boundary examples: smallest shape filled with the element boundaries
+    strat.do_draw = lambda rng, index: draw_at(rng, index)  # type: ignore
+    return strat
+
+
+def array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=8
+                 ) -> SearchStrategy:
+    def draw(rng):
+        nd = rng.randint(min_dims, max_dims)
+        return tuple(rng.randint(min_side, max_side) for _ in range(nd))
+    return SearchStrategy(draw, ((min_side,) * min_dims,))

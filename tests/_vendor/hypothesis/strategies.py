@@ -1,0 +1,63 @@
+"""Strategies for the fallback hypothesis (see package docstring)."""
+from __future__ import annotations
+
+import math
+
+
+class SearchStrategy:
+    """A draw function plus boundary examples tried on the first iterations."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def do_draw(self, rng, index: int):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)),
+                              [fn(b) for b in self._boundary])
+
+
+def integers(min_value, max_value) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+    boundary = (lo, hi) if hi != lo else (lo,)
+    return SearchStrategy(lambda rng: rng.randint(lo, hi), boundary)
+
+
+def floats(min_value=None, max_value=None, *, width: int = 64,
+           allow_nan: bool = False, allow_infinity: bool = False
+           ) -> SearchStrategy:
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+
+    def draw(rng):
+        x = rng.uniform(lo, hi)
+        if width == 32:  # round through fp32 like real hypothesis does
+            import numpy as np
+            x = float(np.float32(x))
+        return x
+
+    boundary = (lo, hi, (lo + hi) / 2.0)
+    return SearchStrategy(draw, boundary)
+
+
+def sampled_from(options) -> SearchStrategy:
+    options = list(options)
+    return SearchStrategy(lambda rng: rng.choice(options), options[:2])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)), (False, True))
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.do_draw(rng, 10 ** 9) for s in strategies),
+        ())
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, (value,))

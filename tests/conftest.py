@@ -1,3 +1,15 @@
+"""Deterministic test environment, pinned BEFORE jax initializes:
+
+- JAX_PLATFORMS=cpu: the suite never depends on an accelerator being free.
+- 8 spoofed host devices: multi-device sharding/shard_map tests run in-process
+  on any machine; single-device behaviour is unchanged (jit without shardings
+  uses device 0). Tests needing a different count (e.g. the 512-device
+  dry-run) spawn subprocesses with their own XLA_FLAGS.
+- hypothesis: when the real package is absent (hermetic images), a minimal
+  deterministic fallback from tests/_vendor is used so property tests still
+  run (see tests/_vendor/hypothesis/__init__.py for the contract).
+"""
+import importlib.util
 import os
 import sys
 from pathlib import Path
@@ -5,9 +17,19 @@ from pathlib import Path
 # src layout import without install
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
-# and benches must see the real single-device host. Multi-device distribution
-# tests spawn subprocesses with their own XLA_FLAGS (see test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()
+
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, str(Path(__file__).resolve().parent / "_vendor"))
+    import warnings
+    warnings.warn(
+        "hypothesis is not installed: property tests run against the minimal "
+        "deterministic fallback in tests/_vendor (no shrinking, fixed "
+        "sampling). `pip install hypothesis` for full coverage.")
 
 import jax  # noqa: E402
 

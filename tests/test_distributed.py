@@ -1,6 +1,7 @@
-"""Distributed (shard_map) solver tests. Multi-device cases run in a
-subprocess with --xla_force_host_platform_device_count=8 so the main test
-process keeps the real single-device view.
+"""Distributed (shard_map) solver tests. The main process already sees 8
+spoofed devices (pinned in conftest.py), which the in-process parity test
+relies on; the subprocess cases remain for flows that must control their own
+XLA flags end-to-end (fresh backend init, HLO counting).
 
 Verifies the paper's Table I structurally: the compiled HLO of the classical
 solver contains T all-reduce rounds; the CA solver contains T/k.
@@ -19,6 +20,8 @@ import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
+pytestmark = pytest.mark.dist
+
 
 def run_sub(code: str) -> str:
     env = dict(os.environ,
@@ -28,6 +31,33 @@ def run_sub(code: str) -> str:
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]
     return out.stdout
+
+
+@pytest.mark.parametrize("algs", [("sfista", "ca_sfista"),
+                                  ("spnm", "ca_spnm")])
+def test_distributed_ca_ulp_parity_inprocess(algs):
+    """test_core's ulp-parity claim, extended to the sharded path: given the
+    same per-shard sample draws, the k-step CA solver and the classical
+    solver are arithmetically identical under shard_map too (absolute
+    tolerance, no rtol — same operation sequence, only XLA reassociation).
+    Runs in-process on the conftest-spoofed 8-device host."""
+    from repro.core import SolverConfig
+    from repro.core.distributed import make_distributed_solver, shard_problem
+    from repro.core.problem import lipschitz_step
+    from repro.data import make_lasso_data
+
+    prob, _ = make_lasso_data(jax.random.PRNGKey(0), d=24, n=2048)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    cfg = SolverConfig(T=48, k=8, b=0.1, Q=5)
+    Xs, ys = shard_problem(mesh, prob.X, prob.y)
+    t = lipschitz_step(prob.X)
+    w0, key = jnp.zeros(prob.d), jax.random.PRNGKey(3)
+
+    classical, ca = (
+        np.asarray(make_distributed_solver(a, mesh, cfg, prob.lam)(
+            Xs, ys, w0, t, key)) for a in algs)
+    np.testing.assert_allclose(ca, classical, atol=5e-6, rtol=0)
+    assert np.isfinite(classical).all()
 
 
 def test_distributed_ca_matches_classical_8dev():

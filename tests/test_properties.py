@@ -122,11 +122,8 @@ def test_fit_spec_always_divides(a, b):
 
 
 def test_fit_spec_drops_and_degrades():
-    import numpy as _np
-    from jax.sharding import Mesh, AxisType
-    devs = _np.array(jax.devices() * 512)[:512].reshape(2, 16, 16)
-    mesh = Mesh(devs, ("pod", "data", "model"),
-                axis_types=(AxisType.Auto,) * 3)
+    from repro.dist.compat import spoof_mesh
+    mesh = spoof_mesh((2, 16, 16), ("pod", "data", "model"))
     # 50280 % 16 != 0 -> model axis dropped on dim 0
     spec = fit_spec(P("model", "data"), (50280, 1536), mesh)
     assert spec[0] is None and spec[1] == "data"

@@ -5,18 +5,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_arch
+from repro.dist.compat import spoof_mesh as fake_mesh
 from repro.dist.sharding import (make_rules, param_specs, cache_specs,
                                  fit_spec)
 from repro.models import init_params, init_cache
-
-
-def fake_mesh(shape, names):
-    n = int(np.prod(shape))
-    devs = np.array(list(jax.devices()) * n)[:n].reshape(shape)
-    return Mesh(devs, names, axis_types=(AxisType.Auto,) * len(names))
 
 
 @pytest.fixture(scope="module")
