@@ -1,9 +1,20 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, JSON record capture."""
 from __future__ import annotations
 
 import time
 
 import jax
+
+#: records captured by every emit() since process start; benchmarks.run
+#: serializes these with --json for a machine-readable perf trajectory
+RECORDS: list = []
+_SUITE = ""
+
+
+def set_suite(name: str) -> None:
+    """Tag subsequent emit() records with the running suite's name."""
+    global _SUITE
+    _SUITE = name
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
@@ -21,3 +32,6 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.2f},{derived}")
+    RECORDS.append(dict(suite=_SUITE, name=name,
+                        us_per_call=round(float(us_per_call), 2),
+                        derived=derived))

@@ -1,13 +1,19 @@
 """Benchmark harness: one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV rows.
+``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally writes
+the same records as ``[{suite, name, us_per_call, derived}, ...]`` — the
+machine-readable perf trajectory CI archives per commit.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,...] [--json OUT.json]
+  PYTHONPATH=src python -m benchmarks.run --only serve --json BENCH_serve.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+from benchmarks import common
 
 SUITES = {
     "fig2_convergence_b": "benchmarks.convergence_b",
@@ -17,6 +23,7 @@ SUITES = {
     "table1_costs": "benchmarks.cost_table",
     "kernels": "benchmarks.kernel_bench",
     "wallclock": "benchmarks.solver_wallclock",
+    "serve": "benchmarks.serve_bench",
 }
 
 
@@ -24,8 +31,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write captured records as JSON to PATH")
     args = ap.parse_args(argv)
+    del common.RECORDS[:]        # main() is reentrant: one run, one trajectory
     picked = set(args.only.split(",")) if args.only else set(SUITES)
+    unknown = picked - set(SUITES)
+    if unknown:
+        raise SystemExit(f"unknown suites {sorted(unknown)}; "
+                         f"available: {sorted(SUITES)}")
 
     import importlib
     failures = []
@@ -33,12 +47,17 @@ def main(argv=None) -> None:
         if name not in picked:
             continue
         print(f"# --- {name} ---", flush=True)
+        common.set_suite(name)
         try:
             mod = importlib.import_module(mod_name)
             mod.run()
         except Exception:
             traceback.print_exc()
             failures.append(name)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.RECORDS, f, indent=1)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}")
     if failures:
         print(f"# FAILED suites: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,54 @@
+"""Serving benchmark: steady-state decode throughput of the continuous-
+batching engine as a function of k (decode steps per host sync).
+
+Saturated-decode methodology: exactly ``slots`` requests with length-1
+prompts and a common token budget, so every slot decodes in lockstep for the
+whole run (no admission churn in the timed region) and ``stats.steps`` is
+the true decode-step count. One untimed drain compiles the fused block; the
+timed drain then measures per-step wall time. The k=1 row IS the classic
+one-sync-per-token schedule, so ms/step falling with k is the paper's
+latency-by-k claim measured on the serve path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_arch, smoke_config
+from repro.models import init_params
+from repro.serve import Engine, Request
+
+ARCH = "internlm2-1.8b"
+NEW_TOKENS = 64
+
+
+def _requests(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(id=f"r{i}", prompt=[int(rng.randint(cfg.vocab))],
+                    max_new_tokens=NEW_TOKENS) for i in range(n)]
+
+
+def run():
+    cfg = smoke_config(get_arch(ARCH))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    for slots in (4, 16):
+        for k in (1, 4, 16):
+            eng = Engine(params, cfg, num_slots=slots, max_len=NEW_TOKENS + 8,
+                         k=k, max_prompt=4)
+            eng.run(_requests(cfg, slots))            # untimed: jit compile
+            base = eng.stats.steps
+            reqs = _requests(cfg, slots, seed=1)
+            t0 = time.perf_counter()
+            out = eng.run(reqs)
+            dt = time.perf_counter() - t0
+            steps = eng.stats.steps - base
+            toks = sum(len(r.tokens) for r in out)
+            emit(f"serve/{cfg.name}/k={k},slots={slots}", dt / steps * 1e6,
+                 f"tok_per_s={toks / dt:.0f};ms_per_step={dt / steps * 1e3:.3f}")
+
+
+if __name__ == "__main__":
+    run()

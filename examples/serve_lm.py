@@ -1,8 +1,9 @@
-"""Batched serving example (deliverable b): greedy decode with a sharded
-KV/SSM cache; works for every assigned architecture including attention-free
-Mamba2 (O(1) decode state).
+"""Batched serving example (deliverable b): continuous-batching engine with
+communication-avoiding k-step decode (see ``repro.serve``); works for every
+assigned architecture including attention-free Mamba2 (O(1) decode state).
 
-  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m --k 8
+  PYTHONPATH=src python examples/serve_lm.py --engine off   # classic loop
 """
 import sys, pathlib
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))

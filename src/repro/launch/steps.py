@@ -120,12 +120,17 @@ def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
 
 def make_serve_step(cfg, rules: Optional[Rules], *, use_pallas: bool = False,
                     greedy: bool = True):
-    """Returns serve_step(params, cache, tokens) -> (next_tokens, logits, cache)."""
+    """Returns serve_step(params, cache, tokens, positions=None) ->
+    (next_tokens, logits, cache).
+
+    positions: optional (B,) per-slot decode depths — see
+    ``repro.models.decode_step``; the continuous-batching engine
+    (``repro.serve``) drives this, the classic whole-batch path omits it."""
     constrain = rules.constrain if rules is not None else (lambda x, s: x)
 
-    def serve_step(params, cache, tokens):
+    def serve_step(params, cache, tokens, positions=None):
         logits, cache = decode_step(params, cfg, cache, tokens,
-                                    constrain=constrain,
+                                    positions=positions, constrain=constrain,
                                     use_pallas=use_pallas)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, logits, cache

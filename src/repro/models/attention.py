@@ -39,8 +39,11 @@ def _attn_inner(q, k, v, *, causal: bool, chunk: int, scale: float,
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # kv_valid_len may be scalar (shared cache fill) or (B,) (per-slot fill —
+    # the continuous-batching serve path, where every batch row sits at its
+    # own decode depth)
     valid = jnp.asarray(Skv if kv_valid_len is None else kv_valid_len,
-                        jnp.int32)
+                        jnp.int32).reshape(-1, 1, 1)
 
     # Operands stay bf16 (MXU-native); accumulation is fp32 via
     # preferred_element_type. Upcasting q itself costs a full fp32
@@ -58,10 +61,10 @@ def _attn_inner(q, k, v, *, causal: bool, chunk: int, scale: float,
         s = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
                        preferred_element_type=jnp.float32) * scale
         kpos = ic * chunk + jnp.arange(chunk, dtype=jnp.int32)
-        mask = kpos[None, :] < valid
+        mask = kpos[None, None, :] < valid                 # (1|B, 1, chunk)
         if causal:
-            mask = mask & (qpos[:, None] >= kpos[None, :])
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = mask & (qpos[:, None] >= kpos[None, :])[None]
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)

@@ -66,6 +66,9 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
     """GQA attention. x (B,S,d).
 
     cache: dict(k=(B,Smax,Hkv,Dh), v=...) updated at cache_pos (decode).
+    cache_pos: scalar (whole batch at one depth, classic decode) or (B,)
+    int32 (per-slot depths — the continuous-batching serve path; each batch
+    row writes and masks at its own position).
     kv_override: (k, v) tuple for cross-attention (whisper decoder).
     Returns (out, new_cache).
     """
@@ -105,10 +108,16 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
     new_cache = cache
     kv_valid = None
     if cache is not None:
-        k = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
-        v = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        if getattr(cache_pos, "ndim", 0):      # (B,) per-slot write positions
+            upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
+                c, u, (p, 0, 0)))
+            k = upd(cache["k"], k.astype(cache["k"].dtype), cache_pos)
+            v = upd(cache["v"], v.astype(cache["v"].dtype), cache_pos)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
         new_cache = dict(k=k, v=v)
         kv_valid = cache_pos + S
         causal = False if S == 1 else causal    # single query: mask via kv_valid

@@ -273,15 +273,26 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
     return cache
 
 
-def decode_step(params, cfg, cache, tokens, *, constrain=_no_constrain,
-                use_pallas: bool = False):
-    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+def decode_step(params, cfg, cache, tokens, *, positions=None,
+                constrain=_no_constrain, use_pallas: bool = False):
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache).
+
+    positions: optional (B,) int32 per-slot decode depths (continuous-batching
+    serve path). When given, each batch row RoPEs at its own position and
+    writes its KV at its own cache index; ``cache["pos"]`` is ignored for
+    addressing (the caller owns per-slot lengths) but still advanced so the
+    pytree keeps its classic-path meaning. Default: the scalar ``cache["pos"]``
+    shared by the whole batch."""
     fam = cfg.family
-    pos = cache["pos"]
     B = tokens.shape[0]
+    if positions is None:
+        pos = cache["pos"]
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    else:
+        pos = jnp.asarray(positions, jnp.int32)            # (B,) per-slot
+        positions = pos[:, None]
     x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
     x = constrain(x, ("batch", None, None))
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
     pos_info = dict(positions=positions)
     if cfg.family == "vlm":
         # after the vision prefix all three M-RoPE streams advance together
@@ -364,7 +375,7 @@ def decode_step(params, cfg, cache, tokens, *, constrain=_no_constrain,
         raise ValueError(fam)
 
     logits = _logits(params, cfg, x, constrain)
-    cache = dict(cache, pos=pos + 1)
+    cache = dict(cache, pos=cache["pos"] + 1)   # stays scalar in both modes
     return logits, cache
 
 

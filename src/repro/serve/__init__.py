@@ -1,0 +1,30 @@
+"""Serving: continuous batching with communication-avoiding k-step decode.
+
+Five modules, one contract:
+
+- ``api``       — ``Request`` / ``Response`` / ``EngineStats`` dataclasses.
+- ``cache``     — ``CachePool``: slot-based paged KV/SSM cache over the
+                  ``init_cache`` layouts (allocate / free / defrag), sharded
+                  via ``repro.dist.cache_specs`` when rules are bound.
+- ``scheduler`` — FIFO admission + ``repro.dist.DeadlineGate`` overload
+                  shedding.
+- ``decode``    — the ``lax.scan``-fused k-step decode block: k tokens per
+                  host sync (the paper's CA-k schedule on the serve path).
+- ``engine``    — the run loop: ingest -> schedule -> k-step decode ->
+                  retire -> stats.
+"""
+from repro.serve.api import (Request, Response, EngineStats, FINISH_EOS,
+                             FINISH_LENGTH, FINISH_SHED)
+from repro.serve.cache import CachePool, SlotError
+from repro.serve.scheduler import Scheduler
+from repro.serve.decode import (DecodeState, init_decode_state,
+                                make_decode_block)
+from repro.serve.engine import Engine
+
+__all__ = [
+    "Request", "Response", "EngineStats",
+    "FINISH_EOS", "FINISH_LENGTH", "FINISH_SHED",
+    "CachePool", "SlotError", "Scheduler",
+    "DecodeState", "init_decode_state", "make_decode_block",
+    "Engine",
+]

@@ -1,0 +1,57 @@
+"""Public request/response/stats types for the serving engine.
+
+Pure-host dataclasses: nothing here touches jax, so schedulers and drivers
+can be unit-tested without device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+FINISH_EOS = "eos"          # model emitted the eos token
+FINISH_LENGTH = "length"    # hit max_new_tokens (or the cache ran out)
+FINISH_SHED = "shed"        # rejected by overload admission, never decoded
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    prompt: token ids (≥ 1; the last prompt token primes the first decode).
+    enc_embeds: (enc_len, d_model) array for enc-dec (whisper) archs — the
+    audio frontend is a stub repo-wide, so callers pass frame embeddings.
+    """
+    id: str
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    enc_embeds: Optional[object] = None
+    arrival_s: Optional[float] = None       # stamped by the engine at submit
+
+
+@dataclasses.dataclass
+class Response:
+    id: str
+    tokens: List[int]                        # generated ids (prompt excluded)
+    finish_reason: str                       # FINISH_EOS | FINISH_LENGTH | FINISH_SHED
+    prompt_len: int = 0
+    queue_wait_s: float = 0.0                # submit -> slot assignment
+    latency_s: float = 0.0                   # submit -> retirement
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate engine counters; ``syncs`` is the host<->device round-trip
+    count — the quantity the k-step fused decode divides by k."""
+    syncs: int = 0                           # fused-block dispatches
+    steps: int = 0                           # model decode steps (= syncs * k)
+    tokens_out: int = 0                      # tokens delivered to responses
+    prefill_tokens: int = 0                  # prompt tokens consumed in-loop
+    admitted: int = 0
+    retired: int = 0
+    shed: int = 0
+    defrags: int = 0
+    occupancy_sum: float = 0.0               # live-slot fraction, per sync
+
+    @property
+    def occupancy(self) -> float:
+        return self.occupancy_sum / self.syncs if self.syncs else 0.0

@@ -1,0 +1,159 @@
+"""Slot-based cache pool over the ``init_cache`` layouts.
+
+A *slot* is one batch row of the decode cache pytree from
+``repro.models.init_cache`` — KV pages for attention archs, (conv, ssm)
+state for mamba2/zamba2, self-attn pages + cross-attn K/V for whisper. The
+pool owns slot bookkeeping (allocate / free / defrag) and the pure-array slot
+operations; the engine owns the live cache pytree itself (it is threaded
+through the jitted k-step decode block as a carry).
+
+The batch axis of every leaf is *inferred*, not hard-coded per family: the
+pool eval_shapes ``init_cache`` at two batch sizes and diffs the shapes, so
+zamba2's ``(n_super, period, B, ...)`` stacked layout and whisper's
+``(n_layers, B, enc_len, ...)`` cross cache need no special cases.
+
+Sharding: with ``rules`` bound, the pool cache is laid out by
+``repro.dist.cache_specs`` (batch@data, KV-sequence@model — the
+flash-decoding layout), so the serving engine runs on the same production
+meshes as the trainer.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+from repro.dist import cache_shardings
+
+_NO_BATCH = -1
+
+
+def _batch_axes(cfg, max_len: int, enc_len: Optional[int]):
+    """Pytree of batch-axis indices (``_NO_BATCH`` for batchless leaves)."""
+    a = jax.eval_shape(lambda: init_cache(cfg, 2, max_len, enc_len=enc_len))
+    b = jax.eval_shape(lambda: init_cache(cfg, 3, max_len, enc_len=enc_len))
+
+    def diff(x, y):
+        axes = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+        assert len(axes) <= 1, f"ambiguous batch axis for shape {x.shape}"
+        return axes[0] if axes else _NO_BATCH
+
+    return jax.tree.map(diff, a, b)
+
+
+class SlotError(RuntimeError):
+    """Invalid slot transition (double allocate/free)."""
+
+
+class CachePool:
+    """Bookkeeping + pure slot ops for a ``num_slots``-row decode cache."""
+
+    def __init__(self, cfg, num_slots: int, max_len: int, *, rules=None,
+                 enc_len: Optional[int] = None):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.cfg = cfg
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.enc_len = enc_len
+        self.rules = rules
+        self.batch_axes = _batch_axes(cfg, max_len, enc_len)
+        # lowest-index-first allocation keeps live slots packed at the front
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._owner: Dict[int, str] = {}
+
+    # ----------------------------------------------------------- construction
+    def make_cache(self):
+        """Fresh pool cache pytree; ownership passes to the caller."""
+        cache = init_cache(self.cfg, self.num_slots, self.max_len,
+                           enc_len=self.enc_len)
+        if self.rules is not None and self.rules.n_devices > 1:
+            cache = jax.device_put(cache, cache_shardings(cache, self.rules))
+        return cache
+
+    # ------------------------------------------------------------ bookkeeping
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_count(self) -> int:
+        return len(self._owner)
+
+    def live_slots(self) -> List[int]:
+        return sorted(self._owner)
+
+    def owner(self, slot: int) -> Optional[str]:
+        return self._owner.get(slot)
+
+    def allocate(self, request_id: str) -> int:
+        if not self._free:
+            raise SlotError("cache pool exhausted")
+        slot = self._free.pop()
+        assert slot not in self._owner, "free list / owner map out of sync"
+        self._owner[slot] = request_id
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise SlotError(f"slot {slot} is not allocated")
+        del self._owner[slot]
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    def fragmentation(self) -> float:
+        """Hole fraction of the occupied span [0, max live slot]."""
+        if not self._owner:
+            return 0.0
+        span = max(self._owner) + 1
+        return 1.0 - len(self._owner) / span
+
+    # --------------------------------------------------------- pure slot ops
+    def zero_slot(self, cache, slot: int):
+        """Zero one slot's rows (required for SSM state reuse; for attention
+        the stale pages are already invisible behind per-slot kv_valid)."""
+        def f(leaf, ax):
+            if ax == _NO_BATCH:
+                return leaf
+            idx = (slice(None),) * ax + (slot,)
+            return leaf.at[idx].set(jnp.zeros((), leaf.dtype))
+        return jax.tree.map(f, cache, self.batch_axes)
+
+    def set_slot(self, cache, slot: int, row_cache):
+        """Write a batch=1 cache (e.g. whisper cross-K/V prefill) into a slot."""
+        def f(leaf, row, ax):
+            if ax == _NO_BATCH:
+                return leaf
+            idx = (slice(None),) * ax + (slot,)
+            return leaf.at[idx].set(jnp.take(row, 0, axis=ax).astype(leaf.dtype))
+        return jax.tree.map(f, cache, row_cache, self.batch_axes)
+
+    def defrag(self, cache) -> Tuple[object, List[int], Dict[int, int]]:
+        """Compact live slots to the lowest indices, preserving contents.
+
+        Returns ``(new_cache, perm, mapping)``: ``perm`` is the old-slot
+        permutation applied along every batch axis (new row i holds old row
+        ``perm[i]``) — callers must apply the same ``jnp.take(..., perm)`` to
+        any per-slot side arrays (lengths, tokens, masks); ``mapping`` is
+        old->new for the live slots only.
+        """
+        live = self.live_slots()
+        perm = live + [s for s in range(self.num_slots) if s not in self._owner]
+        mapping = {old: new for new, old in enumerate(live)}
+        perm_dev = jnp.asarray(perm, jnp.int32)
+
+        def f(leaf, ax):
+            if ax == _NO_BATCH:
+                return leaf
+            return jnp.take(leaf, perm_dev, axis=ax)
+
+        new_cache = jax.tree.map(f, cache, self.batch_axes)
+        self._owner = {mapping[s]: rid for s, rid in self._owner.items()}
+        self._free = list(range(self.num_slots - 1, len(live) - 1, -1))
+        return new_cache, perm, mapping
+
+    def take_rows(self, per_slot, perm):
+        """Apply a defrag permutation to a (num_slots, ...) device array."""
+        return jnp.take(per_slot, jnp.asarray(perm, jnp.int32), axis=0)

@@ -1,0 +1,224 @@
+"""Continuous-batching engine: ingest queue -> schedule -> k-step fused
+decode -> retire slots -> stats.
+
+One ``step()`` is one scheduling round plus one fused decode block: admit
+queued requests into free cache slots (writing their prompts into the
+device-resident prompt buffer, zeroing reused slot state, prefilling
+whisper's cross-attention K/V), dispatch the k-step block, then make the
+single host sync of the round — fetch the k emitted tokens and the per-slot
+done masks, extend per-request outputs, and retire finished slots. The block
+never recompiles: every shape (num_slots, max_prompt, k) is fixed at engine
+construction, and admission only mutates slot rows between blocks.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+from repro.models.transformer import prefill_audio_cache
+from repro.serve.api import (Request, Response, EngineStats, FINISH_EOS,
+                             FINISH_LENGTH, FINISH_SHED)
+from repro.serve.cache import CachePool
+from repro.serve.decode import init_decode_state, make_decode_block
+from repro.serve.scheduler import Scheduler
+
+
+class Engine:
+    """Continuous-batching serving engine over a slot cache pool.
+
+    params/cfg: model weights + arch config (any of the 10 assigned archs).
+    num_slots: concurrent sequences (the fused block's batch dimension).
+    max_len: per-slot cache depth; k: decode steps per host sync.
+    eos_id: greedy decode stops a slot on this token (None: length-only).
+    scheduler: admission policy; default plain FIFO (pass
+    ``Scheduler(gate=DeadlineGate(...))`` for overload shedding).
+    """
+
+    def __init__(self, params, cfg, *, rules=None, num_slots: int = 8,
+                 max_len: int = 128, k: int = 4,
+                 max_prompt: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 enc_len: Optional[int] = None, use_pallas: bool = False,
+                 defrag_threshold: float = 0.5):
+        self.params = params
+        self.cfg = cfg
+        self.k = int(k)
+        self.max_len = int(max_len)
+        self.max_prompt = int(max_prompt if max_prompt is not None
+                              else max_len)
+        self.eos_id = eos_id
+        enc_len = (enc_len if enc_len is not None else max_len) \
+            if cfg.family == "audio" else None
+        self.pool = CachePool(cfg, num_slots, max_len, rules=rules,
+                              enc_len=enc_len)
+        self.scheduler = scheduler if scheduler is not None else Scheduler()
+        self.defrag_threshold = float(defrag_threshold)
+        self._block = make_decode_block(cfg, rules, k=self.k,
+                                        max_len=self.max_len, eos_id=eos_id,
+                                        use_pallas=use_pallas)
+        self.state = init_decode_state(self.pool.make_cache(), num_slots)
+        B, P = num_slots, self.max_prompt
+        self._prompt_buf = np.zeros((B, P), np.int32)
+        self._prompt_len = np.zeros((B,), np.int32)
+        self._len_host = np.zeros((B,), np.int32)   # host mirror of lengths
+        self._max_new = np.ones((B,), np.int32)
+        self._active = np.zeros((B,), bool)
+        self._slot_req: dict = {}
+        self._slot_toks: dict = {}
+        self._slot_t0: dict = {}
+        self.stats = EngineStats()
+        if cfg.family == "audio":
+            row = lambda p, enc: prefill_audio_cache(
+                p, cfg, init_cache(cfg, 1, self.max_len, enc_len=enc_len),
+                enc[None].astype(jnp.bfloat16))
+            self._audio_row = jax.jit(row)
+
+    # -------------------------------------------------------------- ingest
+    def submit(self, req: Request) -> None:
+        n = len(req.prompt)
+        if n < 1:
+            raise ValueError(f"request {req.id}: empty prompt")
+        if n > self.max_prompt or n >= self.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt length {n} exceeds engine bounds "
+                f"(max_prompt={self.max_prompt}, max_len={self.max_len})")
+        if self.cfg.family == "audio":
+            want = (self.pool.enc_len, self.cfg.d_model)
+            got = np.shape(req.enc_embeds) if req.enc_embeds is not None \
+                else None
+            if got != want:
+                raise ValueError(f"request {req.id}: enc-dec arch needs "
+                                 f"enc_embeds of shape {want}, got {got}")
+        self.scheduler.submit(req)
+
+    # -------------------------------------------------------------- admit
+    def _admit(self, now: float) -> List[Response]:
+        out: List[Response] = []
+        admit, shed = self.scheduler.schedule(self.pool.free_count, now)
+        for r in shed:
+            wait = now - r.arrival_s
+            out.append(Response(id=r.id, tokens=[], finish_reason=FINISH_SHED,
+                                prompt_len=len(r.prompt), queue_wait_s=wait,
+                                latency_s=wait))
+            self.stats.shed += 1
+        st = self.state
+        slots = []
+        for r in admit:
+            slot = self.pool.allocate(r.id)
+            slots.append(slot)
+            if self.cfg.family == "audio":
+                cache = self.pool.set_slot(
+                    st.cache, slot, self._audio_row(self.params,
+                                                    jnp.asarray(r.enc_embeds)))
+            else:
+                cache = self.pool.zero_slot(st.cache, slot)
+            st = st._replace(cache=cache)
+            n = len(r.prompt)
+            self._prompt_buf[slot, :] = 0
+            self._prompt_buf[slot, :n] = np.asarray(r.prompt, np.int32)
+            self._prompt_len[slot] = n
+            self._len_host[slot] = 0
+            self._max_new[slot] = max(int(r.max_new_tokens), 1)
+            self._active[slot] = True
+            self._slot_req[slot] = r
+            self._slot_toks[slot] = []
+            self._slot_t0[slot] = now
+            self.stats.admitted += 1
+        if slots:
+            idx = jnp.asarray(slots, jnp.int32)
+            z = jnp.zeros((len(slots),), jnp.int32)
+            st = st._replace(lengths=st.lengths.at[idx].set(z),
+                             last_tok=st.last_tok.at[idx].set(z),
+                             n_out=st.n_out.at[idx].set(z),
+                             done=st.done.at[idx].set(False))
+        self.state = st
+        return out
+
+    # -------------------------------------------------------------- defrag
+    def _maybe_defrag(self) -> None:
+        if self.pool.live_count == 0 or \
+                self.pool.fragmentation() < self.defrag_threshold:
+            return
+        cache, perm, mapping = self.pool.defrag(self.state.cache)
+        take = lambda a: self.pool.take_rows(a, perm)
+        self.state = self.state._replace(
+            cache=cache, lengths=take(self.state.lengths),
+            last_tok=take(self.state.last_tok), n_out=take(self.state.n_out),
+            done=take(self.state.done))
+        hperm = np.asarray(perm)
+        self._prompt_buf = self._prompt_buf[hperm]
+        self._prompt_len = self._prompt_len[hperm]
+        self._len_host = self._len_host[hperm]
+        self._max_new = self._max_new[hperm]
+        self._active = self._active[hperm]
+        self._slot_req = {mapping[s]: r for s, r in self._slot_req.items()}
+        self._slot_toks = {mapping[s]: t for s, t in self._slot_toks.items()}
+        self._slot_t0 = {mapping[s]: t for s, t in self._slot_t0.items()}
+        self.stats.defrags += 1
+
+    # ---------------------------------------------------------------- step
+    def step(self, now: Optional[float] = None) -> List[Response]:
+        """One scheduling round + one fused k-step block + one host sync."""
+        now = self.scheduler.clock() if now is None else now
+        out = self._admit(now)
+        live = self.pool.live_count
+        if live == 0:
+            return out
+        len_before = self._len_host   # mirrors device lengths: no extra sync
+        self.state, toks, emitted = self._block(
+            self.params, self.state, jnp.asarray(self._prompt_buf),
+            jnp.asarray(self._prompt_len), jnp.asarray(self._max_new),
+            jnp.asarray(self._active))
+        # the round's single host sync: k tokens + per-slot masks
+        toks = np.asarray(toks)
+        emitted = np.asarray(emitted)
+        done = np.asarray(self.state.done)
+        len_after = np.asarray(self.state.lengths)
+        self._len_host = len_after.copy()   # writable host mirror
+        self.stats.syncs += 1
+        self.stats.steps += self.k
+        self.stats.occupancy_sum += live / self.pool.num_slots
+        plen = self._prompt_len
+        self.stats.prefill_tokens += int(
+            (np.minimum(len_after, plen) - np.minimum(len_before, plen))
+            [self._active].sum())
+        end = self.scheduler.clock()   # same clock as admission timestamps
+        for slot in list(self._slot_req):
+            got = toks[:, slot][emitted[:, slot]]
+            self._slot_toks[slot].extend(int(t) for t in got)
+            self.stats.tokens_out += len(got)
+            if not done[slot]:
+                continue
+            r = self._slot_req.pop(slot)
+            seq = self._slot_toks.pop(slot)
+            t0 = self._slot_t0.pop(slot)
+            reason = FINISH_EOS if (self.eos_id is not None and seq
+                                    and seq[-1] == self.eos_id) \
+                else FINISH_LENGTH
+            out.append(Response(id=r.id, tokens=seq, finish_reason=reason,
+                                prompt_len=len(r.prompt),
+                                queue_wait_s=t0 - r.arrival_s,
+                                latency_s=end - r.arrival_s))
+            self.pool.free(slot)
+            self._active[slot] = False
+            self.stats.retired += 1
+        self._maybe_defrag()
+        return out
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: Iterable[Request] = (), *,
+            max_syncs: int = 1_000_000) -> List[Response]:
+        """Drain: submit ``requests``, then step until queue and slots empty."""
+        for r in requests:
+            self.submit(r)
+        out: List[Response] = []
+        for _ in range(max_syncs):
+            if not len(self.scheduler) and self.pool.live_count == 0:
+                return out
+            out.extend(self.step())
+        raise RuntimeError(f"engine did not drain within {max_syncs} syncs")

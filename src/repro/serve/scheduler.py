@@ -1,0 +1,66 @@
+"""Admission scheduling: FIFO slot assignment + DeadlineGate overload
+shedding.
+
+Under normal load the scheduler is plain FIFO: longest-waiting requests take
+free slots first. Under *overload* (queue deeper than the free slots) it
+reuses ``repro.dist.DeadlineGate`` — the straggler-quorum gate from the
+CA-k collective path — as a load-shedding policy: each queued request's wait
+time plays the role of a worker's arrival time at a sync point. Requests
+whose wait already exceeds ``deadline_s`` have blown their latency budget;
+serving them spends slots on responses the client has likely abandoned, so
+the gate drops them (``finish_reason="shed"``) — but never more than a
+``1 - quorum`` fraction of the queue, exactly the gate's quorum guarantee.
+This closes the ROADMAP item of wiring ``DeadlineGate`` into the CA-k path:
+the k-step decode block is the collective, admission is its gate.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, List, Optional, Tuple
+
+from repro.dist import DeadlineGate
+from repro.serve.api import Request
+
+
+class Scheduler:
+    """FIFO queue + gate-based overload shedding.
+
+    gate=None disables shedding (pure FIFO backpressure: requests wait
+    indefinitely for a slot).
+    """
+
+    def __init__(self, *, gate: Optional[DeadlineGate] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.gate = gate
+        self.clock = clock
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        if req.arrival_s is None:
+            req.arrival_s = self.clock() if now is None else now
+        self._q.append(req)
+
+    def schedule(self, free_slots: int,
+                 now: Optional[float] = None
+                 ) -> Tuple[List[Request], List[Request]]:
+        """-> (admit, shed). ``admit`` fits in ``free_slots``; ``shed`` are
+        expired requests dropped under overload (empty without a gate)."""
+        if not self._q:
+            return [], []
+        now = self.clock() if now is None else now
+        cand = list(self._q)
+        shed: List[Request] = []
+        if self.gate is not None and len(cand) > free_slots:
+            waits = [now - r.arrival_s for r in cand]
+            kept_idx, _ = self.gate.admit(waits)
+            kept = set(kept_idx)
+            shed = [r for i, r in enumerate(cand) if i not in kept]
+            cand = [r for i, r in enumerate(cand) if i in kept]
+        admit = cand[:max(free_slots, 0)]
+        keep_back = cand[max(free_slots, 0):]
+        self._q = deque(keep_back)
+        return admit, shed
