@@ -1,50 +1,71 @@
-"""Kernel microbenchmarks: XLA path wall time on this host (the Pallas TPU
-kernels run in interpret mode here, so wall-clock comparisons use the XLA
-paths; kernel correctness is covered in tests, kernel ROOFLINE in dryrun)."""
+"""Kernel microbenchmarks: the registry op table swept per backend.
+
+Iterates every registered op over representative shapes and times each
+available backend through the same ``registry.dispatch`` call sites
+production code uses — the per-op timing table CI archives as
+``BENCH_kernels.json``. On this CPU host the ``pallas`` column runs in
+interpret mode (a dispatch-overhead/correctness signal, not a perf target);
+``xla`` wall times are the comparable numbers. Shapes where the requested
+backend would silently fall back (unsupported call) are skipped.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import time_fn, emit
-from repro.kernels.gram import ref as gram_ref
-from repro.models.attention import chunked_attention
-from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels import registry
 
-KEY = jax.random.PRNGKey(0)
+#: op -> [(label, make_inputs shape descriptor)]; dataset-like sizes for the
+#: paper hot spots, tiny-model sizes for the LM substrate ops.
+SWEEP = {
+    "gram": [("d=54,m=5810", (54, 5810)), ("d=130,m=2048", (130, 2048))],
+    "prox_step": [("d=512", (512,))],
+    "prox_loop": [("d=512,Q=3", (512,))],
+    "flash_attention": [("B1,S256,H4,D64", (1, 256, 4, 64, 256, 2))],
+    "ssd": [("B1,S512,H4,P32", (1, 512, 4, 32, 32))],
+}
+
+#: interpret-mode pallas is orders of magnitude slower than XLA on CPU; time
+#: it on reduced cousins (same op, smaller extent) to stay in the CI budget.
+PALLAS_SWEEP = {
+    "gram": [("d=54,m=512", (54, 512))],
+    "prox_step": [("d=128", (128,))],
+    "prox_loop": [("d=128,Q=3", (128,))],
+    "flash_attention": [("B1,S64,H4,D64", (1, 64, 4, 64, 64, 2))],
+    "ssd": [("B1,S128,H2,P16", (1, 128, 2, 16, 16))],
+}
+
+
+def _dispatch_under(op: str, backend: str, kw: dict, *args):
+    with registry.use(backend):
+        return registry.dispatch(op, *args, **kw)
 
 
 def run():
-    # sampled Gram (paper hot spot) across dataset-like shapes
-    for (d, m) in ((8, 4177), (54, 5810), (18, 50000)):
-        Xs = jax.random.normal(KEY, (d, m))
-        f = jax.jit(gram_ref.gram)
-        t = time_fn(f, Xs)
-        flops = 2 * d * d * m
-        emit(f"kernel/gram/d={d},m={m}", t * 1e6,
-             f"gflops={flops/t/1e9:.2f}")
-
-    # chunked attention vs naive
-    B, H, S, D = 1, 4, 1024, 64
-    q = jax.random.normal(KEY, (B, S, H, D), jnp.bfloat16)
-    k = jax.random.normal(KEY, (B, S, H, D), jnp.bfloat16)
-    v = jax.random.normal(KEY, (B, S, H, D), jnp.bfloat16)
-    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=256,
-                                                  q_chunk=256))
-    t = time_fn(f, q, k, v)
-    emit(f"kernel/chunked_attention/S={S}", t * 1e6,
-         f"tok_per_s={B*S/t:.0f}")
-
-    # SSD chunked scan
-    Bt, S, Hh, P, N = 1, 2048, 8, 64, 64
-    x = jax.random.normal(KEY, (Bt, S, Hh, P))
-    dt = jax.nn.softplus(jax.random.normal(KEY, (Bt, S, Hh)))
-    A = -jnp.exp(jax.random.normal(KEY, (Hh,)))
-    Bm = jax.random.normal(KEY, (Bt, S, N))
-    Cm = jax.random.normal(KEY, (Bt, S, N))
-    f = jax.jit(lambda *a: ssd_ops.ssd(*a, chunk=64, use_kernel=False)[0])
-    t = time_fn(f, x, dt, A, Bm, Cm)
-    emit(f"kernel/ssd/S={S}", t * 1e6, f"tok_per_s={Bt*S/t:.0f}")
+    for op in registry.ops():
+        meta = registry.get_op(op)
+        if meta.make_inputs is None:
+            continue
+        for backend in registry.backends_of(op):
+            sweep = PALLAS_SWEEP if backend == "pallas" else SWEEP
+            for label, shape in sweep.get(op, []):
+                args, kw = meta.make_inputs(shape)
+                try:
+                    with registry.use(backend):
+                        if registry.select(op, *args, **kw).backend != backend:
+                            continue        # would silently fall back: skip
+                    f = jax.jit(functools.partial(_dispatch_under, op,
+                                                  backend, kw))
+                    t = time_fn(f, *args, iters=3, warmup=1)
+                except Exception as e:      # noqa: BLE001 - report, don't die
+                    # -1 sentinel, not NaN: json.dump would emit a bare NaN
+                    # literal and break strict-JSON consumers of the artifact
+                    emit(f"kernel/{op}/{backend}/{label}", -1.0,
+                         f"error={type(e).__name__}")
+                    continue
+                emit(f"kernel/{op}/{backend}/{label}", t * 1e6, "")
 
 
 if __name__ == "__main__":

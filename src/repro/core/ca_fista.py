@@ -8,11 +8,14 @@ Structure per outer iteration i (T/k outer iterations):
 Arithmetic is identical to classical SFISTA given the same index draws — the
 same ``fista_update`` is applied to the same (G_j, R_j) sequence; only the
 *schedule* of the collective changes. tests/test_core.py asserts trajectories
-match to the last ulp.
+match to the last ulp, under every registry backend (the policy is resolved
+once per call and pinned for the whole trace — see ``core.fista``).
+``use_kernel``/``backend`` are deprecated per-call overrides.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,13 +25,45 @@ from repro.core.sampling import sample_index_batch
 from repro.core.gram import gram_blocks
 from repro.core.update_rules import init_state, fista_update
 from repro.core.fista import _resolve_step
+from repro.kernels import registry
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "use_kernel", "backend"))
+def validate_ca_config(cfg: SolverConfig, solver: str) -> None:
+    """CA solvers regroup the T draws into T/k blocks of k: T % k must be 0
+    (otherwise the reshape fails deep in jit with an opaque shape error)."""
+    if cfg.k < 1:
+        raise ValueError(f"{solver}: cfg.k must be >= 1, got k={cfg.k}")
+    if cfg.T % cfg.k != 0:
+        raise ValueError(
+            f"{solver}: cfg.T must be divisible by cfg.k (the k-step "
+            f"schedule runs T/k outer iterations of k updates each), got "
+            f"T={cfg.T}, k={cfg.k}. Pick T a multiple of k or k=1.")
+
+
 def ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-              w0=None, collect_history: bool = False, use_kernel: bool = False,
-              backend: str = "jnp"):
-    """k-step SFISTA. Returns w_T (and optionally the (T, d) iterate history)."""
+              w0=None, collect_history: bool = False,
+              use_kernel: Optional[bool] = None,
+              backend: Optional[str] = None):
+    """k-step SFISTA. Returns w_T (and optionally the (T, d) iterate history).
+
+    Deprecated kwargs keep their historical per-op scope: ``use_kernel``
+    pins only the prox update, ``backend`` only the Gram computation;
+    everything else follows the ambient registry policy."""
+    validate_ca_config(cfg, "ca_sfista")
+    gram = registry.legacy_backend(backend=backend, owner="ca_sfista")
+    prox = registry.legacy_backend(use_kernel, owner="ca_sfista")
+    resolved = registry.resolved_backend()
+    with registry.use(resolved):
+        return _ca_sfista(problem, cfg, key, w0, collect_history, resolved,
+                          gram, prox)
+
+
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
+                                   "gram_backend", "prox_backend"))
+def _ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+               w0, collect_history: bool, backend: str,
+               gram_backend: Optional[str] = None,
+               prox_backend: Optional[str] = None):
     d, n = problem.X.shape
     m = max(int(cfg.b * n), 1)
     t = _resolve_step(problem, cfg)
@@ -39,11 +74,13 @@ def ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
 
     def outer(state, idx_block):
         # Paper Alg. III line 6-7: k Gram blocks, one (conceptual) broadcast.
-        G, R = gram_blocks(problem.X, problem.y, idx_block, backend=backend)
+        with registry.use(gram_backend):
+            G, R = gram_blocks(problem.X, problem.y, idx_block)
 
         def inner(st, gr):
             Gj, Rj = gr
-            new = fista_update(Gj, Rj, st, t, problem.lam, use_kernel)
+            with registry.use(prox_backend):
+                new = fista_update(Gj, Rj, st, t, problem.lam)
             return new, (new.w if collect_history else None)
 
         state, hist = jax.lax.scan(inner, state, (G, R))

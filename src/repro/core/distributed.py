@@ -27,6 +27,7 @@ from repro.core.problem import SolverConfig
 from repro.core.sampling import sample_index_batch
 from repro.core.gram import sampled_gram, gram_blocks
 from repro.core.update_rules import init_state, fista_update, pnm_update
+from repro.kernels import registry
 
 
 def _local_solver(algorithm: str, cfg: SolverConfig, lam: float,
@@ -112,7 +113,17 @@ def make_distributed_solver(algorithm: str, mesh: Mesh, cfg: SolverConfig,
         out_specs=rep,
         check_rep=False,
     )
-    return jax.jit(solve)
+    # Like the step builders in launch/steps.py, pin the registry backend at
+    # build time: the trace runs under it, so the jitted solver cannot
+    # silently diverge from a later policy change (the executable is cached;
+    # rebuild the solver to re-resolve the policy).
+    backend = registry.resolved_backend()
+
+    def solve_pinned(X, y, w0, t, key):
+        with registry.use(backend):
+            return solve(X, y, w0, t, key)
+
+    return jax.jit(solve_pinned)
 
 
 def shard_problem(mesh: Mesh, X, y, axis: str | tuple = "data"):

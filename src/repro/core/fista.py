@@ -1,8 +1,17 @@
 """Classical SFISTA (paper Algorithm I) and a deterministic full-batch FISTA
-reference used as the convergence oracle."""
+reference used as the convergence oracle.
+
+Backend selection: the public solver resolves the kernel-registry policy
+ONCE at call time, pins it for the trace (``with registry.use(backend)``) and
+passes the resolved name into the jitted body as a static argument — so the
+jit cache is keyed by backend and a policy change re-traces instead of
+silently reusing a stale executable. ``use_kernel`` is a deprecated per-call
+override (True -> pallas, False -> xla).
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +21,7 @@ from repro.core.sampling import sample_index_batch
 from repro.core.gram import sampled_gram
 from repro.core.update_rules import init_state, fista_update
 from repro.core.soft_threshold import soft_threshold, fista_momentum
+from repro.kernels import registry
 
 
 def _resolve_step(problem: LassoProblem, cfg: SolverConfig):
@@ -20,15 +30,30 @@ def _resolve_step(problem: LassoProblem, cfg: SolverConfig):
     return lipschitz_step(problem.X, cfg.power_iters)
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "use_kernel"))
 def sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-           w0=None, collect_history: bool = False, use_kernel: bool = False):
+           w0=None, collect_history: bool = False,
+           use_kernel: Optional[bool] = None):
     """Stochastic FISTA: T iterations, one sampled-Gram + update per iteration.
 
     In the distributed setting each iteration all-reduces (G_j, R_j) —
     the communication bottleneck the CA variant removes (see ca_fista.py).
     Returns w_T, or (w_T, (k, d) iterate history) when collect_history.
     """
+    # Deprecated use_kernel pins ONLY the prox op (its historical scope);
+    # everything else follows the ambient policy.
+    prox = registry.legacy_backend(use_kernel, owner="sfista")
+    backend = registry.resolved_backend()
+    with registry.use(backend):
+        return _sfista(problem, cfg, key, w0, collect_history, backend, prox)
+
+
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
+                                   "prox_backend"))
+def _sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+            w0, collect_history: bool, backend: str,
+            prox_backend: Optional[str] = None):
+    # ``backend`` keys the jit cache; dispatch resolves it from the policy
+    # the public wrapper pinned for this trace.
     d, n = problem.X.shape
     m = max(int(cfg.b * n), 1)
     t = _resolve_step(problem, cfg)
@@ -37,7 +62,8 @@ def sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
 
     def step(state, idx_j):
         G, R = sampled_gram(problem.X, problem.y, idx_j)
-        new = fista_update(G, R, state, t, problem.lam, use_kernel)
+        with registry.use(prox_backend):
+            new = fista_update(G, R, state, t, problem.lam)
         return new, (new.w if collect_history else None)
 
     state, hist = jax.lax.scan(step, init_state(w0), idx)

@@ -6,41 +6,44 @@ These are the only statistics through which the stochastic iteration touches
 the data — the linchpin of the k-step reformulation: G/R for k future
 iterations can be computed (and all-reduced) before any of the k updates run.
 
-``backend='pallas'`` routes the rank-m update through the TPU Pallas kernel in
-``repro.kernels.gram`` (validated on CPU in interpret mode); default is XLA.
+The rank-m update dispatches through the kernel registry (op ``gram``):
+``REPRO_BACKEND=pallas`` / ``with registry.use("pallas")`` routes it to the
+TPU Pallas kernel in ``repro.kernels.gram`` (interpret-validated on CPU);
+the default policy resolves to the XLA path. The ``backend=`` kwarg is a
+deprecated per-call override.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sampling import sample_columns
+from repro.kernels import registry
 
 
 def sampled_gram(X: jax.Array, y: jax.Array, idx: jax.Array,
-                 m_norm=None, backend: str = "jnp"):
+                 m_norm=None, backend: Optional[str] = None):
     """One (G_j, R_j) pair from one index draw.
 
     m_norm: normalization constant; defaults to the local draw size m. The
     distributed solvers pass the *global* sample count so that psum of local
     Grams equals the Gram of the union of the samples.
     """
+    forced = registry.legacy_backend(backend=backend, owner="sampled_gram")
     Xs, ys = sample_columns(X, y, idx)
     m = idx.shape[0] if m_norm is None else m_norm
     inv_m = 1.0 / m
-    if backend == "pallas":
-        from repro.kernels.gram import ops as gram_ops
-        G = gram_ops.gram(Xs) * inv_m
-    else:
-        G = (Xs @ Xs.T) * inv_m
+    with registry.use(forced):
+        G = registry.dispatch("gram", Xs) * inv_m
     R = (Xs @ ys) * inv_m
     return G, R
 
 
 def gram_blocks(X: jax.Array, y: jax.Array, idx_batch: jax.Array,
-                m_norm=None, backend: str = "jnp"):
+                m_norm=None, backend: Optional[str] = None):
     """k independent Gram blocks at once: G (k, d, d), R (k, d).
 
     This is the paper's line 6 of Algorithm III — the k-step unrolled Gram

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,13 +12,27 @@ from repro.core.sampling import sample_index_batch
 from repro.core.gram import sampled_gram
 from repro.core.update_rules import init_state, pnm_update
 from repro.core.fista import _resolve_step
+from repro.kernels import registry
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "use_kernel"))
 def spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-         w0=None, collect_history: bool = False, use_kernel: bool = False):
+         w0=None, collect_history: bool = False,
+         use_kernel: Optional[bool] = None):
     """Stochastic proximal Newton: per iteration, sample a Gram block H_j and
-    solve the quadratic subproblem with Q inner ISTA steps (warm-started)."""
+    solve the quadratic subproblem with Q inner ISTA steps (warm-started).
+    Kernels follow the registry policy; deprecated ``use_kernel`` pins only
+    the inner prox solve (its historical scope)."""
+    prox = registry.legacy_backend(use_kernel, owner="spnm")
+    backend = registry.resolved_backend()
+    with registry.use(backend):
+        return _spnm(problem, cfg, key, w0, collect_history, backend, prox)
+
+
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
+                                   "prox_backend"))
+def _spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+          w0, collect_history: bool, backend: str,
+          prox_backend: Optional[str] = None):
     d, n = problem.X.shape
     m = max(int(cfg.b * n), 1)
     t = _resolve_step(problem, cfg)
@@ -26,7 +41,8 @@ def spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
 
     def step(state, idx_j):
         G, R = sampled_gram(problem.X, problem.y, idx_j)
-        new = pnm_update(G, R, state, t, problem.lam, cfg.Q, use_kernel)
+        with registry.use(prox_backend):
+            new = pnm_update(G, R, state, t, problem.lam, cfg.Q)
         return new, (new.w if collect_history else None)
 
     state, hist = jax.lax.scan(step, init_state(w0), idx)

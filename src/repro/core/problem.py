@@ -37,6 +37,11 @@ class SolverConfig:
     Attributes:
       T: total outer iterations (classical) / total effective iterations (CA).
       k: communication-avoiding step parameter; collectives fire every k iters.
+        The CA solvers regroup the T draws into T/k blocks, so T must be a
+        multiple of k — validated here at construction AND with a clear
+        ValueError in ``ca_sfista``/``ca_spnm`` (which would otherwise fail
+        deep inside jit with an opaque reshape error). Classical solvers
+        ignore k.
       b: sampling rate in (0, 1]; m = floor(b*n) columns drawn per iteration.
       Q: inner first-order iterations for the proximal-Newton subproblem.
       step_size: fixed step t; if None, 1/L with L = eigmax((1/n) X X^T) via

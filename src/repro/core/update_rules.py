@@ -4,6 +4,12 @@ CA and classical solvers call the *same* functions on (G_j, R_j) — this is wha
 makes the k-step reformulation arithmetically identical to the classical
 algorithm (paper §IV-A), a property asserted bitwise in tests/test_core.py.
 
+The prox step dispatches through the kernel registry (ops ``prox_step`` /
+``prox_loop``): the same update runs as fused Pallas kernels or as the XLA
+path depending on the process backend policy; CA-vs-classical parity holds
+under either because both solvers resolve the same policy. ``use_kernel`` is
+a deprecated per-call override.
+
 Note on gradient evaluation point: the paper's Algorithm I/III pseudocode is
 ambiguous (it writes grad at w_{j-1} but applies the step at v_j). We follow
 textbook FISTA (Beck & Teboulle 2009) and evaluate the gradient at the
@@ -11,12 +17,13 @@ extrapolated point v_j — the Gram linearity grad = G v - R makes this free.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.soft_threshold import soft_threshold, fista_momentum
+from repro.core.soft_threshold import fista_momentum
+from repro.kernels import registry
 
 
 class IterState(NamedTuple):
@@ -30,7 +37,7 @@ def init_state(w0: jax.Array) -> IterState:
 
 
 def fista_update(G: jax.Array, R: jax.Array, state: IterState,
-                 t, lam, use_kernel: bool = False) -> IterState:
+                 t, lam, use_kernel: Optional[bool] = None) -> IterState:
     """One FISTA step with sampled-Gram gradient:  (paper Alg. III lines 9-13)
 
         v   = w + (j-2)/j * (w - w_prev)
@@ -38,17 +45,14 @@ def fista_update(G: jax.Array, R: jax.Array, state: IterState,
     """
     mom = fista_momentum(state.j)
     v = state.w + mom * (state.w - state.w_prev)
-    if use_kernel:
-        from repro.kernels.prox_step import ops as prox_ops
-        w_new = prox_ops.prox_step(G, R, v, t, lam)
-    else:
-        grad = G @ v - R
-        w_new = soft_threshold(v - t * grad, lam * t)
+    with registry.use(registry.legacy_backend(use_kernel,
+                                              owner="fista_update")):
+        w_new = registry.dispatch("prox_step", G, R, v, t, lam)
     return IterState(w_prev=state.w, w=w_new, j=state.j + 1)
 
 
 def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
-               t, lam, Q: int, use_kernel: bool = False) -> IterState:
+               t, lam, Q: int, use_kernel: Optional[bool] = None) -> IterState:
     """One proximal-Newton step (paper Alg. IV lines 9-17).
 
     The quadratic subproblem
@@ -57,11 +61,7 @@ def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
     grad + H(z - w) = G z - R, so Q inner ISTA iterations are
         z <- S_{lam*t}( z - t (G z - R) ),   z_0 = w   (warm start).
     """
-    if use_kernel:
-        from repro.kernels.prox_step import ops as prox_ops
-        z = prox_ops.prox_loop(G, R, state.w, t, lam, Q)
-    else:
-        def body(q, z):
-            return soft_threshold(z - t * (G @ z - R), lam * t)
-        z = jax.lax.fori_loop(0, Q, body, state.w)
+    with registry.use(registry.legacy_backend(use_kernel,
+                                              owner="pnm_update")):
+        z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q)
     return IterState(w_prev=state.w, w=z, j=state.j + 1)

@@ -2,9 +2,19 @@
 
 Each kernel package has:
   kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
-  ops.py     jit'd public wrapper with padding/dispatch + interpret fallback
+  ops.py     jit'd public wrapper with padding + registry registration
   ref.py     pure-jnp oracle used by tests/benchmarks
 
-On this CPU container all kernels execute via interpret=True; the BlockSpecs
-are written for TPU v5e VMEM (16 MiB/core) and MXU (128x128) alignment.
+Shared machinery:
+  registry.py  the op table + backend policy + autotuner ("which
+               implementation runs" lives here, not in call signatures)
+  pad.py       the round-up/pad/unpad helpers every ops.py uses
+
+On this CPU container all Pallas kernels execute via interpret=True; the
+BlockSpecs are written for TPU v5e VMEM (16 MiB/core) and MXU (128x128)
+alignment. Select backends process-wide with REPRO_BACKEND=pallas|xla,
+``registry.set_backend``, or scoped with ``with registry.use("pallas"):``.
 """
+from repro.kernels import pad, registry
+
+__all__ = ["pad", "registry"]

@@ -4,6 +4,10 @@ dim to 128 lanes), GQA validation, interpret-mode dispatch on CPU.
 Zero-padding is exact: padded head-dim lanes contribute 0 to q.k and produce
 0 output lanes (sliced off); padded kv rows are masked to -inf in-kernel;
 padded q rows produce garbage rows that are sliced off.
+
+This wrapper keeps the kernel's (B, H, S, D) layout; the registry op
+``flash_attention`` (model layout, XLA fallback) is registered by
+``repro.models.attention`` on top of it.
 """
 from __future__ import annotations
 
@@ -12,15 +16,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pad
 from repro.kernels.flash_attention import kernel as _k
 
 DEFAULT_BQ = 512
 DEFAULT_BK = 512
 LANE = 128
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
@@ -38,17 +39,15 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
     scale = (D ** -0.5) if scale is None else scale
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    bq = bq or min(DEFAULT_BQ, _round_up(Sq, 8))
-    bk = bk or min(DEFAULT_BK, _round_up(Skv, 8))
+    bq = bq or min(DEFAULT_BQ, pad.round_up(Sq, 8))
+    bk = bk or min(DEFAULT_BK, pad.round_up(Skv, 8))
 
-    Dp = _round_up(D, LANE)
-    Sqp, Skvp = _round_up(Sq, bq), _round_up(Skv, bk)
-    pad4 = lambda x, s, d: jnp.pad(x, ((0, 0), (0, 0), (0, s), (0, d)))
-    qp = pad4(q, Sqp - Sq, Dp - D)
-    kp = pad4(k, Skvp - Skv, Dp - D)
-    vp = pad4(v, Skvp - Skv, Dp - D)
+    Dp = pad.round_up(D, LANE)
+    qp = pad.pad_dims(q, {2: pad.round_up(Sq, bq), 3: Dp})
+    kp = pad.pad_dims(k, {2: pad.round_up(Skv, bk), 3: Dp})
+    vp = pad.pad_dims(v, {2: pad.round_up(Skv, bk), 3: Dp})
 
     out = _k.flash_attention(
         qp, kp, vp, causal=causal, scale=scale, bq=bq, bk=bk,
         kv_len=Skv, q_offset=Skv - Sq, interpret=interpret)
-    return out[:, :, :Sq, :D]
+    return pad.unpad_dims(out, {2: Sq, 3: D})

@@ -1,5 +1,8 @@
 """Public jit'd wrapper for the sampled-Gram kernel: pads to tile multiples,
-dispatches Pallas (interpret on CPU, compiled on TPU), unpads."""
+dispatches Pallas (interpret on CPU, compiled on TPU), unpads.
+
+Registers the ``gram`` op: ``pallas`` is the tiled SYRK kernel below,
+``xla`` is the pure-jnp oracle (fp32 accumulation either way)."""
 from __future__ import annotations
 
 import functools
@@ -7,11 +10,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pad, registry
 from repro.kernels.gram import kernel as _k
-
-
-def _round_up(x: int, mult: int) -> int:
-    return (x + mult - 1) // mult * mult
+from repro.kernels.gram import ref as _ref
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "bm", "interpret"))
@@ -20,11 +21,40 @@ def gram(Xs: jax.Array, *, bd: int | None = None, bm: int | None = None,
     """G = Xs @ Xs^T for arbitrary (d, m). Zero-padding the sample axis is
     exact (padded columns contribute 0 to the outer-product sum)."""
     d, m = Xs.shape
-    bd = bd or min(_k.DEFAULT_BD, _round_up(d, 8))
-    bm = bm or min(_k.DEFAULT_BM, _round_up(m, 128))
+    bd = bd or min(_k.DEFAULT_BD, pad.round_up(d, 8))
+    bm = bm or min(_k.DEFAULT_BM, pad.round_up(m, 128))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    dp, mp = _round_up(d, bd), _round_up(m, bm)
-    Xp = jnp.pad(Xs.astype(jnp.float32), ((0, dp - d), (0, mp - m)))
+    dp, mp = pad.round_up(d, bd), pad.round_up(m, bm)
+    Xp = pad.pad_dims(Xs.astype(jnp.float32), {0: dp, 1: mp})
     G = _k.gram(Xp, bd=bd, bm=bm, interpret=interpret)
-    return G[:d, :d]
+    return pad.unpad_dims(G, {0: d, 1: d})
+
+
+def _gram_xla(Xs: jax.Array, *, bd=None, bm=None, interpret=None) -> jax.Array:
+    del bd, bm, interpret                       # pallas-only tunables
+    return _ref.gram(Xs)
+
+
+# ------------------------------------------------------------ registry ----
+
+def _make_inputs(shape, dtype=jnp.float32):
+    d, m = shape
+    Xs = jax.random.normal(jax.random.PRNGKey(0), (d, m), dtype)
+    return (Xs,), {}
+
+
+def _candidates(backend, shape):
+    if backend != "pallas":
+        return []
+    d, m = shape
+    return [dict(bd=bd, bm=bm)
+            for bd in (8, 32, 128) if bd <= pad.round_up(d, 8)
+            for bm in (128, 512) if bm <= pad.round_up(m, 128)]
+
+
+registry.describe("gram", shape_of=lambda Xs, **kw: tuple(Xs.shape),
+                  make_inputs=_make_inputs, candidates=_candidates)
+registry.register("gram", "pallas", tunables=("bd", "bm"),
+                  differentiable=False)(gram)
+registry.register("gram", "xla")(_gram_xla)

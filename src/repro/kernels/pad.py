@@ -1,0 +1,49 @@
+"""Shared padding helpers for the kernel wrappers.
+
+Every ``kernels/*/ops.py`` pads operands to tile multiples before the
+``pallas_call`` and slices the result back; these helpers replace the four
+copy-pasted ``_round_up``/pad/unpad blocks. Padding is always a zero fill,
+which each op's wrapper docstring argues is exact for that op (zero columns
+contribute nothing to a Gram sum, zero kv rows are masked in-kernel, ...).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is >= ``x``."""
+    return -(-x // mult) * mult
+
+
+def pad_dims(x: jax.Array, targets: Mapping[int, int]) -> jax.Array:
+    """Zero-pad ``x`` so that ``x.shape[axis] == targets[axis]`` for each
+    entry; other axes are untouched. One fused ``jnp.pad`` call, so the
+    emitted HLO is identical to the hand-written per-op padding it replaces.
+    """
+    widths = [(0, 0)] * x.ndim
+    for axis, target in targets.items():
+        size = x.shape[axis]
+        if target < size:
+            raise ValueError(f"pad target {target} < size {size} on axis "
+                             f"{axis} of shape {x.shape}")
+        widths[axis] = (0, target - size)
+    if all(w == (0, 0) for w in widths):
+        return x
+    return jnp.pad(x, widths)
+
+
+def pad_to_multiple(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad one axis up to the next multiple of ``mult``."""
+    return pad_dims(x, {axis: round_up(x.shape[axis], mult)})
+
+
+def unpad_dims(x: jax.Array, sizes: Mapping[int, int]) -> jax.Array:
+    """Slice ``x`` back to ``sizes[axis]`` along each given axis."""
+    idx = [slice(None)] * x.ndim
+    for axis, size in sizes.items():
+        idx[axis] = slice(0, size)
+    return x[tuple(idx)]

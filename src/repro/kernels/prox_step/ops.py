@@ -1,5 +1,10 @@
 """Public wrappers for the fused prox kernels: shape adaptation ((d,) vectors
--> (d,1) tiles), VMEM-fit dispatch, XLA fallback for large d."""
+-> (d,1) tiles), VMEM-fit dispatch, XLA fallback for large d.
+
+Registers the ``prox_step`` / ``prox_loop`` ops: ``pallas`` keeps the Gram
+VMEM-resident across the fused update(s) (per-call ``supports`` rejects
+d > VMEM_MAX_D), ``xla`` is the pure-jnp path that is bit-identical to the
+solvers' historical inline update."""
 from __future__ import annotations
 
 import functools
@@ -7,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.prox_step import kernel as _k
 from repro.kernels.prox_step import ref as _ref
 
@@ -27,9 +33,13 @@ def _interpret_default():
     return jax.default_backend() != "tpu"
 
 
+def _fits_vmem(G, *_args, **_kw) -> bool:
+    return G.shape[0] <= VMEM_MAX_D
+
+
 def prox_step(G, R, v, t, lam, interpret: bool | None = None):
     """w+ = S_{lam*t}(v - t*(G v - R)); accepts (d,) vectors."""
-    if G.shape[0] > VMEM_MAX_D:
+    if not _fits_vmem(G):
         return _ref.prox_step(G, R, v, t, lam)
     interpret = _interpret_default() if interpret is None else interpret
     Gp, Rp, vp, scal = _prep(G, R, v, t, lam)
@@ -38,8 +48,39 @@ def prox_step(G, R, v, t, lam, interpret: bool | None = None):
 
 def prox_loop(G, R, z0, t, lam, Q: int, interpret: bool | None = None):
     """z_Q from Q fused warm-started ISTA iterations; accepts (d,) vectors."""
-    if G.shape[0] > VMEM_MAX_D:
+    if not _fits_vmem(G):
         return _ref.prox_loop(G, R, z0, t, lam, Q)
     interpret = _interpret_default() if interpret is None else interpret
     Gp, Rp, zp, scal = _prep(G, R, z0, t, lam)
     return _k.prox_loop(Gp, Rp, zp, scal, Q=Q, interpret=interpret).reshape(z0.shape)
+
+
+# ------------------------------------------------------------ registry ----
+
+def _make_step_inputs(shape, dtype=jnp.float32):
+    d, = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    G = jax.random.normal(ks[0], (d, d), dtype)
+    G = (G @ G.T) / d
+    R = jax.random.normal(ks[1], (d,), dtype)
+    v = jax.random.normal(ks[2], (d,), dtype)
+    return (G, R, v, 0.05, 0.02), {}
+
+
+def _make_loop_inputs(shape, dtype=jnp.float32):
+    # Q rides in kwargs: it is a static (trace-time) arg of the pallas jit,
+    # so benchmark/autotune harnesses must not trace over it
+    args, kw = _make_step_inputs(shape, dtype)
+    return args, dict(kw, Q=3)
+
+
+registry.describe("prox_step", shape_of=lambda G, *a, **kw: tuple(G.shape),
+                  make_inputs=_make_step_inputs)
+registry.describe("prox_loop", shape_of=lambda G, *a, **kw: tuple(G.shape),
+                  make_inputs=_make_loop_inputs)
+registry.register("prox_step", "pallas", supports=_fits_vmem,
+                  differentiable=False)(prox_step)
+registry.register("prox_step", "xla")(_ref.prox_step)
+registry.register("prox_loop", "pallas", supports=_fits_vmem,
+                  differentiable=False)(prox_loop)
+registry.register("prox_loop", "xla")(_ref.prox_loop)

@@ -1,0 +1,469 @@
+"""Unified kernel registry + backend dispatch.
+
+One named-op table for every compute hot spot (``gram``, ``prox_step``,
+``prox_loop``, ``flash_attention``, ``ssd``). Each op registers one
+implementation per *backend* (``pallas`` — the TPU kernels, interpret-mode on
+CPU; ``xla`` — the pure-XLA/jnp paths that compile anywhere), together with
+capability predicates, and every layer of the repo (solvers, models, serve,
+launch) picks its implementation through :func:`dispatch` instead of threading
+``use_kernel``/``backend`` booleans through call signatures.
+
+Backend policy resolution order (first match wins):
+
+1. the innermost active ``with registry.use("..."):`` context,
+2. a process-wide :func:`set_backend` call,
+3. the ``REPRO_BACKEND`` environment variable,
+4. ``auto``: ``pallas`` when running on TPU, ``xla`` otherwise.
+
+Dispatch semantics:
+
+* A requested backend whose impl is missing, unavailable on this process, or
+  whose per-call ``supports`` predicate rejects the arguments falls back to
+  ``xla`` silently — forcing ``REPRO_BACKEND=pallas`` runs the Pallas kernels
+  wherever they apply and the XLA paths everywhere else (e.g. decode steps
+  with a dynamic ``kv_valid_len``, which the static-masked kernel cannot do).
+* Inside :func:`grad_safe` (entered by ``models.loss_fn``) impls registered
+  with ``differentiable=False`` are skipped: the Pallas kernels carry no
+  custom VJP yet, so training always differentiates the XLA paths.
+* Policy is resolved at *trace* time. jit-ted entry points therefore pin the
+  resolved backend for the whole trace (see the solver wrappers in
+  ``repro.core``, which also key their jit cache by the resolved name so a
+  policy change re-traces instead of reusing a stale executable).
+
+Autotuning: :func:`autotune` times an op's registered block-size candidates
+over caller-given shapes and persists the winners to a JSON cache
+(``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``). At dispatch
+time the cache fills any tunable kwarg the caller left as ``None``; explicit
+kwargs always win.
+
+Cache file format — one entry per (op, backend, shape, device kind)::
+
+    {"gram|pallas|54x5810|cpu": {"params": {"bd": 64, "bm": 512},
+                                 "us": 812.4}}
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import importlib
+import json
+import os
+import threading
+import time
+import warnings
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+#: canonical backend names, in "auto" preference order on TPU
+BACKENDS = ("pallas", "xla")
+#: accepted spellings that map onto a canonical backend
+_ALIASES = {"ref": "xla", "jnp": "xla", "interpret": "pallas"}
+
+#: modules whose import registers every op implementation. Kept as lazy
+#: string references so the registry itself has no import-time dependency on
+#: the kernels or models packages (they import *us* for the decorators).
+_IMPL_MODULES = (
+    "repro.kernels.gram.ops",       # registers "gram"
+    "repro.kernels.prox_step.ops",  # registers "prox_step", "prox_loop"
+    "repro.kernels.ssd.ops",        # registers "ssd"
+    "repro.models.attention",       # registers "flash_attention" (model
+                                    # layout; wraps kernels/flash_attention)
+)
+
+
+def _always_true(*_args: Any, **_kw: Any) -> bool:
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Impl:
+    """One backend implementation of a registered op."""
+    backend: str
+    fn: Callable
+    #: process-level capability (e.g. a future GPU backend probing its
+    #: toolchain). Checked once per dispatch.
+    available: Callable[[], bool]
+    #: per-call capability over the actual arguments (e.g. the prox kernel's
+    #: VMEM d-limit, flash attention's static-mask-only constraint).
+    supports: Callable[..., bool]
+    #: False for kernels without a custom VJP; skipped under grad_safe().
+    differentiable: bool = True
+    #: kwarg names the autotuner may fill when the caller passes None.
+    tunables: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class Op:
+    """A named op: its impls plus autotune/test metadata."""
+    name: str
+    impls: Dict[str, Impl] = dataclasses.field(default_factory=dict)
+    #: shape tuple canonically identifying a call (for the autotune cache
+    #: key), derived from real arguments at dispatch time.
+    shape_of: Optional[Callable[..., Tuple[int, ...]]] = None
+    #: (shape, dtype=float32) -> (args, kwargs): random representative inputs.
+    #: Shared by autotune and the registry parity tests.
+    make_inputs: Optional[Callable] = None
+    #: (backend, shape) -> [kwargs, ...] candidate tunable settings.
+    candidates: Optional[Callable] = None
+
+    def backends(self) -> List[str]:
+        return [b for b in BACKENDS if b in self.impls]
+
+
+_OPS: Dict[str, Op] = {}
+_loaded = False
+_load_lock = threading.Lock()
+
+_tls = threading.local()            # .stack: list[str], .grad_depth: int
+_process_backend: Optional[str] = None
+
+
+# --------------------------------------------------------------------------
+# registration
+# --------------------------------------------------------------------------
+
+def _canon(name: str) -> str:
+    low = str(name).lower()
+    low = _ALIASES.get(low, low)
+    if low not in BACKENDS and low != "auto":
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {BACKENDS + ('auto',)}"
+            f" or aliases {tuple(_ALIASES)}")
+    return low
+
+
+def _op(name: str) -> Op:
+    return _OPS.setdefault(name, Op(name))
+
+
+def register(op_name: str, backend: str, *, available: Callable[[], bool] = _always_true,
+             supports: Callable[..., bool] = _always_true,
+             differentiable: bool = True, tunables: Sequence[str] = ()):
+    """Decorator: register ``fn`` as ``op_name``'s ``backend`` implementation.
+
+    All impls of one op must share a call signature (each accepts the union
+    of kwargs and ignores what it does not use) so call sites are
+    backend-oblivious.
+    """
+    backend = _canon(backend)
+
+    def deco(fn: Callable) -> Callable:
+        _op(op_name).impls[backend] = Impl(
+            backend=backend, fn=fn, available=available, supports=supports,
+            differentiable=differentiable, tunables=tuple(tunables))
+        return fn
+    return deco
+
+
+def describe(op_name: str, *, shape_of: Optional[Callable] = None,
+             make_inputs: Optional[Callable] = None,
+             candidates: Optional[Callable] = None) -> None:
+    """Attach autotune/test metadata to an op (see :class:`Op`)."""
+    op = _op(op_name)
+    op.shape_of = shape_of or op.shape_of
+    op.make_inputs = make_inputs or op.make_inputs
+    op.candidates = candidates or op.candidates
+
+
+def _ensure_loaded() -> None:
+    global _loaded
+    if _loaded:
+        return
+    with _load_lock:
+        if _loaded:
+            return
+        for mod in _IMPL_MODULES:
+            importlib.import_module(mod)
+        _loaded = True
+
+
+def ops() -> List[str]:
+    """Sorted names of every registered op."""
+    _ensure_loaded()
+    return sorted(_OPS)
+
+
+def get_op(name: str) -> Op:
+    _ensure_loaded()
+    if name not in _OPS:
+        raise KeyError(f"unknown op {name!r}; registered: {sorted(_OPS)}")
+    return _OPS[name]
+
+
+def backends_of(name: str) -> List[str]:
+    """Backends with a registered impl for ``name``, canonical order."""
+    return get_op(name).backends()
+
+
+# --------------------------------------------------------------------------
+# backend policy
+# --------------------------------------------------------------------------
+
+def _stack() -> List[str]:
+    if not hasattr(_tls, "stack"):
+        _tls.stack = []
+    return _tls.stack
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Set (or with ``None`` clear) the process-wide backend policy.
+
+    Overrides ``REPRO_BACKEND``; overridden by ``with use(...)`` contexts.
+    Only affects traces that happen after the call — already-jitted
+    executables keep the backend they were traced with.
+    """
+    global _process_backend
+    _process_backend = _canon(name) if name is not None else None
+
+
+def policy() -> str:
+    """The active policy name, possibly ``"auto"`` (not yet resolved)."""
+    stack = _stack()
+    if stack:
+        return stack[-1]
+    if _process_backend is not None:
+        return _process_backend
+    env = os.environ.get("REPRO_BACKEND", "").strip()
+    if env:
+        return _canon(env)
+    return "auto"
+
+
+def resolved_backend() -> str:
+    """The concrete backend the active policy selects on this process."""
+    p = policy()
+    if p == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return p
+
+
+@contextlib.contextmanager
+def use(backend: Optional[str]):
+    """Scoped backend override: ``with registry.use("pallas"): ...``.
+
+    Beats :func:`set_backend` and ``REPRO_BACKEND`` while active; restores the
+    previous policy on exit (also on exception). ``use(None)`` is a no-op
+    pass-through so deprecated-kwarg shims can forward unconditionally.
+    """
+    if backend is None:
+        yield
+        return
+    stack = _stack()
+    stack.append(_canon(backend))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def grad_safe():
+    """Scope in which dispatch skips impls without a VJP (``differentiable=
+    False``). Entered by loss functions so training never tries to
+    differentiate through a Pallas kernel."""
+    _tls.grad_depth = getattr(_tls, "grad_depth", 0) + 1
+    try:
+        yield
+    finally:
+        _tls.grad_depth -= 1
+
+
+def _in_grad_safe() -> bool:
+    return getattr(_tls, "grad_depth", 0) > 0
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def _usable(impl: Optional[Impl], args, kwargs) -> bool:
+    return (impl is not None and impl.available()
+            and (impl.differentiable or not _in_grad_safe())
+            and impl.supports(*args, **kwargs))
+
+
+def select(name: str, *args: Any, **kwargs: Any) -> Impl:
+    """The impl :func:`dispatch` would run for this call under the active
+    policy (requested backend, else the ``xla`` fallback)."""
+    op = get_op(name)
+    backend = resolved_backend()
+    impl = op.impls.get(backend)
+    if _usable(impl, args, kwargs):
+        return impl
+    fallback = op.impls.get("xla")
+    if backend != "xla" and _usable(fallback, args, kwargs):
+        return fallback
+    raise NotImplementedError(
+        f"op {name!r}: no usable implementation (policy={policy()!r}, "
+        f"registered={op.backends()}, grad_safe={_in_grad_safe()})")
+
+
+def dispatch(name: str, *args: Any, **kwargs: Any) -> Any:
+    """Run op ``name`` under the active backend policy.
+
+    Tunable kwargs the caller passed as ``None`` (or omitted) are filled from
+    the autotune cache when an entry matches this op/backend/shape/device.
+    """
+    op = get_op(name)
+    impl = select(name, *args, **kwargs)
+    if impl.tunables and op.shape_of is not None:
+        entry = _tuned_entry(op, impl, args, kwargs)
+        if entry:
+            kwargs = dict(kwargs)
+            for key in impl.tunables:
+                if kwargs.get(key) is None and key in entry["params"]:
+                    kwargs[key] = entry["params"][key]
+    return impl.fn(*args, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# autotune cache
+# --------------------------------------------------------------------------
+
+_TUNED: Optional[Dict[str, dict]] = None
+
+
+def cache_path() -> str:
+    """Autotune cache location (``$REPRO_AUTOTUNE_CACHE`` overrides)."""
+    return os.environ.get("REPRO_AUTOTUNE_CACHE") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind.replace(" ", "_").lower()
+    except Exception:                                   # uninitialized backend
+        return "unknown"
+
+
+def _cache_key(op_name: str, backend: str, shape: Tuple[int, ...]) -> str:
+    return f"{op_name}|{backend}|{'x'.join(map(str, shape))}|{_device_kind()}"
+
+
+def _tuned() -> Dict[str, dict]:
+    global _TUNED
+    if _TUNED is None:
+        _TUNED = {}
+        path = cache_path()
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    _TUNED = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                warnings.warn(f"ignoring unreadable autotune cache {path}: {e}")
+    return _TUNED
+
+
+def reload_tuned() -> None:
+    """Drop the in-memory autotune table; next dispatch re-reads the file."""
+    global _TUNED
+    _TUNED = None
+
+
+def _tuned_entry(op: Op, impl: Impl, args, kwargs) -> Optional[dict]:
+    table = _tuned()
+    if not table:
+        return None
+    try:
+        shape = tuple(op.shape_of(*args, **kwargs))
+    except Exception:
+        return None
+    return table.get(_cache_key(op.name, impl.backend, shape))
+
+
+def _time_call(fn: Callable, args, kwargs, iters: int, warmup: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(op_name: str, shapes: Iterable[Sequence[int]], *,
+             backends: Optional[Sequence[str]] = None, iters: int = 3,
+             warmup: int = 1, save: bool = True) -> Dict[str, dict]:
+    """Time each registered block-size candidate of ``op_name`` over
+    ``shapes`` and persist the winners.
+
+    Returns the new cache entries ``{key: {"params": ..., "us": ...}}``; the
+    same entries are merged into the on-disk JSON cache (see
+    :func:`cache_path`) that :func:`dispatch` consults. Candidates that fail
+    to execute (e.g. a block size invalid for the shape) are skipped.
+    """
+    op = get_op(op_name)
+    if op.make_inputs is None:
+        raise ValueError(f"op {op_name!r} has no autotune metadata "
+                         "(registry.describe(make_inputs=...))")
+    wanted = [_canon(b) for b in backends] if backends else op.backends()
+    results: Dict[str, dict] = {}
+    for shape in shapes:
+        shape = tuple(int(s) for s in shape)
+        args, base_kw = op.make_inputs(shape)
+        # key by the canonical dispatch-time shape, which may differ from the
+        # make_inputs descriptor (e.g. prox ops describe (d,) but key (d, d))
+        key_shape = tuple(op.shape_of(*args, **base_kw)) if op.shape_of \
+            else shape
+        for bname in wanted:
+            impl = op.impls.get(bname)
+            if not _usable(impl, args, base_kw) or not impl.tunables:
+                continue
+            cands = op.candidates(bname, shape) if op.candidates else [{}]
+            best: Optional[Tuple[float, dict]] = None
+            for cand in cands or [{}]:
+                kw = {**base_kw,
+                      **{k: v for k, v in cand.items() if k in impl.tunables}}
+                try:
+                    # time the compiled call: tunables are keyword-bound so
+                    # they stay static (some feed static args of inner jits),
+                    # and eager-mode Python overhead doesn't skew the ranking
+                    fn = jax.jit(functools.partial(impl.fn, **kw))
+                    t = _time_call(fn, args, {}, iters, warmup)
+                except Exception:
+                    continue
+                if best is None or t < best[0]:
+                    best = (t, dict(cand))
+            if best is not None:
+                key = _cache_key(op_name, bname, key_shape)
+                entry = dict(params=best[1], us=round(best[0] * 1e6, 2))
+                _tuned()[key] = entry
+                results[key] = entry
+    if save and results:
+        path = cache_path()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(_tuned(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    return results
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+def warn_deprecated(what: str, instead: str) -> None:
+    warnings.warn(f"{what} is deprecated and will be removed next release; "
+                  f"{instead}", DeprecationWarning, stacklevel=3)
+
+
+def legacy_backend(flag: Optional[bool] = None, backend: Optional[str] = None,
+                   *, owner: str, flag_name: str = "use_kernel") -> Optional[str]:
+    """Map the deprecated per-call ``use_kernel``/``use_pallas``/``backend``
+    kwargs onto a backend name (``None`` when neither was passed, so shims
+    can hand the result straight to :func:`use`)."""
+    if backend is not None:
+        warn_deprecated(f"{owner}(backend=...)",
+                        "select backends via repro.kernels.registry "
+                        "(REPRO_BACKEND / registry.use)")
+        return _canon(backend)
+    if flag is not None:
+        warn_deprecated(f"{owner}({flag_name}=...)",
+                        "select backends via repro.kernels.registry "
+                        "(REPRO_BACKEND / registry.use)")
+        return "pallas" if flag else "xla"
+    return None

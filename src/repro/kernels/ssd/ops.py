@@ -1,53 +1,65 @@
 """Public wrapper for the SSD kernel: layout adaptation from the model's
 (B,S,H,P) convention, dt folding, seq padding (exact: padded steps have
-a = 0 -> decay 1 and xdt = 0 -> no state contribution), dispatch."""
+a = 0 -> decay 1 and xdt = 0 -> no state contribution), dispatch.
+
+Registers the ``ssd`` op: ``pallas`` is the chunked-scan kernel (zero initial
+state only — per-call ``supports`` rejects ``h0``), ``xla`` the chunked jnp
+reference. Both share the signature ``(x, dt, A, B, C, *, chunk, h0)``."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pad, registry
 from repro.kernels.ssd import kernel as _k
 from repro.kernels.ssd import ref as _ref
 
+DEFAULT_CHUNK = 64
 
-def ssd(x, dt, A, B, C, *, chunk: int = 64, h0=None,
-        interpret: bool | None = None, use_kernel: bool = True):
-    """Mamba-2 SSD. x (Bt,S,H,P); dt (Bt,S,H); A (H,); B,C (Bt,S,N).
-    Returns y (Bt,S,H,P), h_final (Bt,H,P,N)."""
-    if not use_kernel:
-        Sp = (x.shape[1] + chunk - 1) // chunk * chunk
-        pad = Sp - x.shape[1]
-        if pad:
-            x, dt = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
-                     for a in (x, dt))
-            B, C = (jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in (B, C))
-        y, h = _ref.ssd_chunked(x, dt, A, B, C, chunk=chunk, h0=h0)
-        return y[:, :y.shape[1] - pad] if pad else y, h
 
+def _ssd_xla(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
+             interpret=None):
+    del interpret                               # pallas-only kwarg
+    chunk = chunk or DEFAULT_CHUNK
+    S = x.shape[1]
+    x, dt, B, C = (pad.pad_to_multiple(a, 1, chunk) for a in (x, dt, B, C))
+    y, h = _ref.ssd_chunked(x, dt, A, B, C, chunk=chunk, h0=h0)
+    return pad.unpad_dims(y, {1: S}), h
+
+
+def _ssd_pallas(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
+                interpret: bool | None = None):
     if h0 is not None:
         raise NotImplementedError("kernel path starts from zero state; "
-                                  "pass use_kernel=False for stateful resume")
+                                  "the xla backend handles stateful resume")
+    chunk = chunk or DEFAULT_CHUNK
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     Bt, S, H, P = x.shape
-    N = B.shape[-1]
-    Sp = (S + chunk - 1) // chunk * chunk
-    pad = Sp - S
 
     f32 = jnp.float32
     xdt = (x.astype(f32) * dt[..., None].astype(f32)).transpose(0, 2, 1, 3)
     a = (dt.astype(f32) * A[None, None, :]).transpose(0, 2, 1)[..., None]
     Bm = B.astype(f32)[:, None]                     # (Bt, G=1, S, N)
     Cm = C.astype(f32)[:, None]
-    if pad:
-        xdt = jnp.pad(xdt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        Bm = jnp.pad(Bm, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        Cm = jnp.pad(Cm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    xdt, a, Bm, Cm = (pad.pad_to_multiple(t_, 2, chunk)
+                      for t_ in (xdt, a, Bm, Cm))
 
     y, h = _k.ssd(xdt, a, Bm, Cm, chunk=chunk, ngroups=1, interpret=interpret)
-    y = y.transpose(0, 2, 1, 3)[:, :S].astype(x.dtype)
+    y = pad.unpad_dims(y.transpose(0, 2, 1, 3), {1: S}).astype(x.dtype)
     return y, h
+
+
+def ssd(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
+        interpret: bool | None = None, use_kernel: bool | None = None):
+    """Mamba-2 SSD. x (Bt,S,H,P); dt (Bt,S,H); A (H,); B,C (Bt,S,N).
+    Returns y (Bt,S,H,P), h_final (Bt,H,P,N).
+
+    Backend selection follows the registry policy; ``use_kernel`` is a
+    deprecated override (True -> pallas, False -> xla)."""
+    with registry.use(registry.legacy_backend(use_kernel, owner="ssd")):
+        return registry.dispatch("ssd", x, dt, A, B, C, chunk=chunk, h0=h0,
+                                 interpret=interpret)
 
 
 def ssd_decode_step(x_t, dt_t, A, B_t, C_t, h):
@@ -59,3 +71,32 @@ def ssd_decode_step(x_t, dt_t, A, B_t, C_t, h):
     h = decay[..., None, None] * h + upd
     y = jnp.einsum("bhpn,bn->bhp", h, C_t)
     return y.astype(x_t.dtype), h
+
+
+# ------------------------------------------------------------ registry ----
+
+def _supports_zero_state(x, dt, A, B, C, *, h0=None, **_kw) -> bool:
+    return h0 is None
+
+
+def _make_inputs(shape, dtype=jnp.float32):
+    Bt, S, H, P, N = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H), dtype)) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), dtype) * 0.5)
+    B = jax.random.normal(ks[3], (Bt, S, N), dtype)
+    C = jax.random.normal(ks[4], (Bt, S, N), dtype)
+    return (x, dt, A, B, C), {}
+
+
+def _candidates(backend, shape):
+    _, S = shape[0], shape[1]
+    return [dict(chunk=c) for c in (32, 64, 128) if c <= pad.round_up(S, 32)]
+
+
+registry.describe("ssd", shape_of=lambda x, *a, **kw: tuple(x.shape),
+                  make_inputs=_make_inputs, candidates=_candidates)
+registry.register("ssd", "pallas", supports=_supports_zero_state,
+                  differentiable=False, tunables=("chunk",))(_ssd_pallas)
+registry.register("ssd", "xla", tunables=("chunk",))(_ssd_xla)

@@ -19,6 +19,17 @@ from repro.models import init_params, loss_fn, init_cache, decode_step
 from repro.models.transformer import forward
 from repro.optim import adamw_init, adamw_update, OptState, cosine_schedule
 from repro.dist.sharding import Rules
+from repro.kernels import registry
+
+
+def _build_backend(use_pallas, owner: str) -> str:
+    """Backend a step builder pins for its traces: the deprecated
+    ``use_pallas`` override when given, else the registry policy resolved at
+    build time (a later policy change does not retrace an existing step)."""
+    forced = registry.legacy_backend(use_pallas, owner=owner,
+                                     flag_name="use_pallas")
+    with registry.use(forced):
+        return registry.resolved_backend()
 
 
 class TrainState(NamedTuple):
@@ -29,14 +40,19 @@ class TrainState(NamedTuple):
 def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
                     peak_lr: float = 3e-4, warmup: int = 100,
                     total_steps: int = 10_000, remat: bool = True,
-                    use_pallas: bool = False, sync_every_microbatch=False):
+                    use_pallas=None, sync_every_microbatch=False):
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves have global batch dim B; it is split into ca_k microbatches
     accumulated locally (CA schedule). ``sync_every_microbatch=True`` builds
     the classical-DDP baseline instead: one optimizer update per microbatch,
     hence k collectives per global batch — used for HLO message-count
-    comparisons (paper Table I analogue)."""
+    comparisons (paper Table I analogue).
+
+    Kernels dispatch through ``repro.kernels.registry`` (the backend is
+    resolved once here and pinned for every trace of the returned step);
+    ``use_pallas`` is a deprecated override."""
+    backend = _build_backend(use_pallas, "make_train_step")
     constrain = rules.constrain if rules is not None else (lambda x, s: x)
 
     def split_micro(batch):
@@ -47,10 +63,9 @@ def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
         return jax.tree.map(f, batch)
 
     def micro_loss(params, mb):
-        return loss_fn(params, cfg, mb, constrain=constrain,
-                       use_pallas=use_pallas, remat=remat)
+        return loss_fn(params, cfg, mb, constrain=constrain, remat=remat)
 
-    def train_step(state: TrainState, batch):
+    def _train_step(state: TrainState, batch):
         lr = cosine_schedule(state.opt.step, peak_lr=peak_lr, warmup=warmup,
                              total=total_steps)
         micro = split_micro(batch)
@@ -115,23 +130,32 @@ def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
         return TrainState(params, opt), dict(loss=loss_sum / ca_k,
                                              grad_norm=gnorm, lr=lr)
 
+    def train_step(state: TrainState, batch):
+        with registry.use(backend):
+            return _train_step(state, batch)
+
     return train_step
 
 
-def make_serve_step(cfg, rules: Optional[Rules], *, use_pallas: bool = False,
+def make_serve_step(cfg, rules: Optional[Rules], *, use_pallas=None,
                     greedy: bool = True):
     """Returns serve_step(params, cache, tokens, positions=None) ->
     (next_tokens, logits, cache).
 
     positions: optional (B,) per-slot decode depths — see
     ``repro.models.decode_step``; the continuous-batching engine
-    (``repro.serve``) drives this, the classic whole-batch path omits it."""
+    (``repro.serve``) drives this, the classic whole-batch path omits it.
+
+    Kernels dispatch through ``repro.kernels.registry`` (backend pinned at
+    build time); ``use_pallas`` is a deprecated override."""
+    backend = _build_backend(use_pallas, "make_serve_step")
     constrain = rules.constrain if rules is not None else (lambda x, s: x)
 
     def serve_step(params, cache, tokens, positions=None):
-        logits, cache = decode_step(params, cfg, cache, tokens,
-                                    positions=positions, constrain=constrain,
-                                    use_pallas=use_pallas)
+        with registry.use(backend):
+            logits, cache = decode_step(params, cfg, cache, tokens,
+                                        positions=positions,
+                                        constrain=constrain)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, logits, cache
 

@@ -1,5 +1,5 @@
 """GQA attention: XLA-native chunked (flash-style) path for train/prefill,
-exact cached path for decode, optional Pallas kernel path.
+exact cached path for decode, Pallas kernel path for static-shape attention.
 
 The chunked path is an online-softmax lax.scan over KV blocks — the same
 algorithm as kernels/flash_attention but expressed in XLA ops so it compiles
@@ -10,6 +10,13 @@ For long sequences the query axis is additionally blocked by a static python
 loop (``q_chunk``): peak score memory drops from O(S*Skv) to
 O(q_chunk*kv_chunk), and for causal self-attention each q block only scans
 the KV prefix it can see — matching FlashAttention's block-skipping FLOPs.
+
+This module registers the ``flash_attention`` registry op in the model's
+(B, S, H, D) layout: ``xla`` = :func:`chunked_attention`, ``pallas`` = the
+kernel in ``repro.kernels.flash_attention`` (static masks only — its
+per-call predicate rejects dynamic ``kv_valid_len``, so cached decode always
+takes the XLA path). Call sites use :func:`attention`, which defers to the
+process backend policy (see ``repro.kernels.registry``).
 """
 from __future__ import annotations
 
@@ -18,6 +25,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.kernels.flash_attention import ops as _fa_ops
 
 NEG_INF = -1e30
 
@@ -117,19 +127,90 @@ def chunked_attention(q, k, v, *, causal: bool = True,
     return jnp.concatenate(outs, axis=1)
 
 
-def pallas_attention(q, k, v, *, causal: bool = True, scale=None,
-                     kv_valid_len=None, chunk: int = KV_CHUNK_DEFAULT,
-                     q_chunk=None):
-    """Pallas-kernel path (interpret on CPU). Same (B,S,H,D) layout."""
-    from repro.kernels.flash_attention import ops as fa
-    if kv_valid_len is not None:
-        # the kernel masks by static kv_len; dynamic cache fill uses XLA path
-        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
-                                 scale=scale, kv_valid_len=kv_valid_len)
-    o = fa.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-                           v.transpose(0, 2, 1, 3), causal=causal, scale=scale)
+def _attention_xla(q, k, v, *, causal: bool = True, scale=None,
+                   kv_valid_len=None, chunk: Optional[int] = None,
+                   q_chunk: Optional[int] = Q_CHUNK_DEFAULT,
+                   bq=None, bk=None):
+    del bq, bk                                     # pallas-only tunables
+    return chunked_attention(q, k, v, causal=causal,
+                             chunk=chunk or KV_CHUNK_DEFAULT,
+                             q_chunk=q_chunk, scale=scale,
+                             kv_valid_len=kv_valid_len)
+
+
+def _attention_pallas(q, k, v, *, causal: bool = True, scale=None,
+                      kv_valid_len=None, chunk: Optional[int] = None,
+                      q_chunk: Optional[int] = None, bq=None, bk=None):
+    del kv_valid_len, chunk, q_chunk               # xla-only knobs
+    o = _fa_ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, scale=scale, bq=bq, bk=bk)
     return o.transpose(0, 2, 1, 3)
 
 
-def attention_fn(use_pallas: bool):
-    return pallas_attention if use_pallas else chunked_attention
+def attention(q, k, v, *, causal: bool = True, scale=None, kv_valid_len=None,
+              chunk: Optional[int] = None,
+              q_chunk: Optional[int] = Q_CHUNK_DEFAULT, bq=None, bk=None):
+    """Backend-dispatched GQA attention, (B,S,H,D) layout.
+
+    The implementation is chosen by the registry policy; block sizes left as
+    ``None`` are filled from the autotune cache (then per-impl defaults)."""
+    return registry.dispatch(
+        "flash_attention", q, k, v, causal=causal, scale=scale,
+        kv_valid_len=kv_valid_len, chunk=chunk, q_chunk=q_chunk, bq=bq, bk=bk)
+
+
+def pallas_attention(q, k, v, *, causal: bool = True, scale=None,
+                     kv_valid_len=None, chunk: Optional[int] = None,
+                     q_chunk=None):
+    """Deprecated alias: force the pallas backend for one call (falls back to
+    the XLA path for dynamic ``kv_valid_len``, as before)."""
+    with registry.use("pallas"):
+        return attention(q, k, v, causal=causal, scale=scale,
+                         kv_valid_len=kv_valid_len, chunk=chunk,
+                         q_chunk=q_chunk)
+
+
+def attention_fn(use_pallas: Optional[bool] = None):
+    """Deprecated: use :func:`attention` (registry-dispatched) directly."""
+    registry.warn_deprecated(
+        "attention_fn(use_pallas)",
+        "call models.attention.attention; select backends via "
+        "repro.kernels.registry")
+    if use_pallas is None:
+        return attention
+    forced = "pallas" if use_pallas else "xla"
+
+    def fn(q, k, v, **kw):
+        with registry.use(forced):
+            return attention(q, k, v, **kw)
+    return fn
+
+
+def _fa_make_inputs(shape, dtype=jnp.float32):
+    B, Sq, Hq, D, Skv, Hkv = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    return (q, k, v), dict(causal=True)
+
+
+def _fa_candidates(backend, shape):
+    if backend == "pallas":
+        return [dict(bq=bq, bk=bk) for bq in (32, 128, 512)
+                for bk in (32, 128, 512)]
+    return [dict(chunk=c) for c in (128, 256, 1024)]
+
+
+registry.describe(
+    "flash_attention",
+    shape_of=lambda q, k, v, **kw: (q.shape[0], q.shape[1], q.shape[2],
+                                    q.shape[3], k.shape[1], k.shape[2]),
+    make_inputs=_fa_make_inputs, candidates=_fa_candidates)
+registry.register("flash_attention", "xla",
+                  tunables=("chunk",))(_attention_xla)
+registry.register(
+    "flash_attention", "pallas", tunables=("bq", "bk"), differentiable=False,
+    supports=lambda q, k, v, **kw: kw.get("kv_valid_len") is None,
+)(_attention_pallas)

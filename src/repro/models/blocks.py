@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (rms_norm, apply_rope, apply_mrope, dense_init)
-from repro.models.attention import chunked_attention, pallas_attention
+from repro.models.attention import attention
 from repro.models.mlp import init_swiglu, swiglu
 from repro.models.moe import init_moe, moe_ffn
 
@@ -62,7 +62,7 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
                  positions=None, mrope_pos=None, rope_theta: float = 1e4,
                  causal: bool = True, cache: Optional[dict] = None,
                  cache_pos=None, kv_override=None, constrain=lambda x, s: x,
-                 use_pallas: bool = False, attn_chunk: int = 1024):
+                 attn_chunk: Optional[int] = None):
     """GQA attention. x (B,S,d).
 
     cache: dict(k=(B,Smax,Hkv,Dh), v=...) updated at cache_pos (decode).
@@ -122,8 +122,8 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
         kv_valid = cache_pos + S
         causal = False if S == 1 else causal    # single query: mask via kv_valid
 
-    attn = pallas_attention if use_pallas else chunked_attention
-    o = attn(q, k, v, causal=causal, chunk=attn_chunk, kv_valid_len=kv_valid)
+    o = attention(q, k, v, causal=causal, chunk=attn_chunk,
+                  kv_valid_len=kv_valid)
     o = o.reshape(B, S, n_heads * head_dim)
     out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
     return constrain(out, ("batch", None, None)), new_cache
@@ -151,13 +151,13 @@ def init_dense_block(key, cfg, dtype=jnp.float32):
 
 
 def dense_block(params, x, cfg, *, pos_info, cache=None, cache_pos=None,
-                constrain=lambda x, s: x, use_pallas=False):
+                constrain=lambda x, s: x):
     h, new_cache = attn_forward(
         params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         positions=pos_info.get("positions"), mrope_pos=pos_info.get("mrope"),
         rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
-        constrain=constrain, use_pallas=use_pallas)
+        constrain=constrain)
     x = x + h
     x = x + swiglu(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps),
                    constrain)
@@ -178,13 +178,13 @@ def init_moe_block(key, cfg, dtype=jnp.float32):
 
 
 def moe_block(params, x, cfg, *, pos_info, cache=None, cache_pos=None,
-              constrain=lambda x, s: x, use_pallas=False):
+              constrain=lambda x, s: x):
     h, new_cache = attn_forward(
         params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         positions=pos_info.get("positions"), mrope_pos=pos_info.get("mrope"),
         rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
-        constrain=constrain, use_pallas=use_pallas)
+        constrain=constrain)
     x = x + h
     m, aux = moe_ffn(params["moe"], rms_norm(x, params["ln2"], cfg.norm_eps),
                      top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,

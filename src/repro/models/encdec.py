@@ -21,14 +21,13 @@ def init_enc_block(key, cfg, dtype=jnp.float32):
     )
 
 
-def enc_block(params, x, cfg, constrain, use_pallas=False):
+def enc_block(params, x, cfg, constrain):
     B, S, _ = x.shape
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     h, _ = attn_forward(params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
                         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                         head_dim=cfg.head_dim, positions=pos, causal=False,
-                        rope_theta=cfg.rope_theta, constrain=constrain,
-                        use_pallas=use_pallas)
+                        rope_theta=cfg.rope_theta, constrain=constrain)
     x = x + h
     return x + gelu_mlp(params["mlp"],
                         rms_norm(x, params["ln2"], cfg.norm_eps), constrain)
@@ -62,18 +61,17 @@ def cross_kv(params, enc_out, cfg, constrain):
 
 
 def dec_block(params, x, cfg, *, kv_cross, positions, cache=None,
-              cache_pos=None, constrain=lambda x, s: x, use_pallas=False):
+              cache_pos=None, constrain=lambda x, s: x):
     h, new_cache = attn_forward(
         params["self_attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         positions=positions, rope_theta=cfg.rope_theta, cache=cache,
-        cache_pos=cache_pos, constrain=constrain, use_pallas=use_pallas)
+        cache_pos=cache_pos, constrain=constrain)
     x = x + h
     h, _ = attn_forward(
         params["cross_attn"], rms_norm(x, params["ln2"], cfg.norm_eps),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-        causal=False, kv_override=kv_cross, constrain=constrain,
-        use_pallas=use_pallas)
+        causal=False, kv_override=kv_cross, constrain=constrain)
     x = x + h
     return x + gelu_mlp(params["mlp"],
                         rms_norm(x, params["ln3"], cfg.norm_eps), constrain), \

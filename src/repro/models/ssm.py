@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_init, rms_norm
-from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels import registry
+from repro.kernels.ssd.ops import ssd_decode_step
 
 
 def mamba2_dims(d_model: int, cfg):
@@ -60,8 +61,9 @@ def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
 
 
 def mamba2_forward(params, x, cfg, constrain=lambda x, s: x,
-                   ssd_chunk: int = 64, use_kernel: bool = False):
-    """x (B, S, d_model) -> (B, S, d_model). Training/prefill path."""
+                   ssd_chunk: int = 64):
+    """x (B, S, d_model) -> (B, S, d_model). Training/prefill path. The SSD
+    scan dispatches through the kernel registry (REPRO_BACKEND et al.)."""
     B, S, d_model = x.shape
     d_inner, H, N, conv_ch, _ = mamba2_dims(d_model, cfg)
     P = cfg.ssm_head_dim
@@ -77,9 +79,8 @@ def mamba2_forward(params, x, cfg, constrain=lambda x, s: x,
                          params["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
     xh = xs.reshape(B, S, H, P)
-    y, _ = ssd_ops.ssd(xh, dt, A, Bm.astype(jnp.float32),
-                       Cm.astype(jnp.float32), chunk=ssd_chunk,
-                       use_kernel=use_kernel)
+    y, _ = registry.dispatch("ssd", xh, dt, A, Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32), chunk=ssd_chunk)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
     y = rms_norm(y, params["norm"].astype(jnp.float32))
@@ -111,7 +112,7 @@ def mamba2_decode_step(params, x_t, state, cfg, constrain=lambda x, s: x):
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
                          params["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
-    y_t, h = ssd_ops.ssd_decode_step(
+    y_t, h = ssd_decode_step(
         xs[:, 0].reshape(B, H, P), dt[:, 0], A,
         Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32),
         state["ssm"])

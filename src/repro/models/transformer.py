@@ -18,6 +18,12 @@ from repro.models.ssm import (
     init_mamba2, mamba2_forward, init_mamba2_state, mamba2_decode_step)
 from repro.models import encdec
 from repro.models.frontend import mrope_positions
+from repro.kernels import registry
+
+
+def _legacy(use_pallas, owner):
+    return registry.legacy_backend(use_pallas, owner=owner,
+                                   flag_name="use_pallas")
 
 
 def _no_constrain(x, spec):
@@ -128,13 +134,8 @@ def _logits(params, cfg, x, constrain):
     return constrain(logits, ("batch", None, "tp"))
 
 
-def forward(params, cfg, batch, *, constrain=_no_constrain,
-            use_pallas: bool = False, remat: bool = False,
-            last_only: bool = False):
-    """Teacher-forced forward. Returns (logits, aux_loss).
-
-    last_only: project logits for the final position only (prefill path —
-    avoids materializing the (B, S, V) tensor at 32k sequence lengths)."""
+def _forward(params, cfg, batch, *, constrain=_no_constrain,
+             remat: bool = False, last_only: bool = False):
     fam = cfg.family
     x, pos_info = _embed_inputs(params, cfg, batch, constrain)
     aux = jnp.zeros((), jnp.float32)
@@ -142,7 +143,7 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
     if fam in ("dense", "vlm"):
         def body(x, lp):
             y, _ = dense_block(lp, x, cfg, pos_info=pos_info,
-                               constrain=constrain, use_pallas=use_pallas)
+                               constrain=constrain)
             return y, None
         x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
 
@@ -150,13 +151,12 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
         if cfg.first_layer_dense:
             dense_cfg = cfg.scaled(d_ff=cfg.dense_d_ff)
             x, _ = dense_block(params["dense0"], x, dense_cfg,
-                               pos_info=pos_info, constrain=constrain,
-                               use_pallas=use_pallas)
+                               pos_info=pos_info, constrain=constrain)
 
         def body(carry, lp):
             x, aux = carry
             y, _, a = moe_block(lp, x, cfg, pos_info=pos_info,
-                                constrain=constrain, use_pallas=use_pallas)
+                                constrain=constrain)
             return (y, aux + a), None
         (x, aux), _ = jax.lax.scan(_maybe_remat(body, remat), (x, aux),
                                    params["layers"])
@@ -165,7 +165,7 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
         def body(x, lp):
             h = mamba2_forward(lp["mamba"],
                                rms_norm(x, lp["ln"], cfg.norm_eps), cfg,
-                               constrain, use_kernel=use_pallas)
+                               constrain)
             return x + h, None
         x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
 
@@ -176,15 +176,14 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
             def inner(x, lp):
                 h = mamba2_forward(lp["mamba"],
                                    rms_norm(x, lp["ln"], cfg.norm_eps), cfg,
-                                   constrain, use_kernel=use_pallas)
+                                   constrain)
                 return x + h, None
             x, _ = jax.lax.scan(inner, x, sb)
             h, _ = attn_forward(
                 shared["attn"], rms_norm(x, shared["ln"], cfg.norm_eps),
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                 head_dim=cfg.head_dim, positions=pos_info["positions"],
-                rope_theta=cfg.rope_theta, constrain=constrain,
-                use_pallas=use_pallas)
+                rope_theta=cfg.rope_theta, constrain=constrain)
             return x + h, None
         x, _ = jax.lax.scan(_maybe_remat(super_body, remat), x,
                             params["layers"])
@@ -194,7 +193,7 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
                         ("batch", None, None))
 
         def enc_body(h, lp):
-            return encdec.enc_block(lp, h, cfg, constrain, use_pallas), None
+            return encdec.enc_block(lp, h, cfg, constrain), None
         enc, _ = jax.lax.scan(_maybe_remat(enc_body, remat), enc,
                               params["encoder"])
         enc = rms_norm(enc, params["enc_ln"].astype(jnp.float32), cfg.norm_eps)
@@ -203,7 +202,7 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
             kv = encdec.cross_kv(lp, enc, cfg, constrain)
             y, _ = encdec.dec_block(lp, x, cfg, kv_cross=kv,
                                     positions=pos_info["positions"],
-                                    constrain=constrain, use_pallas=use_pallas)
+                                    constrain=constrain)
             return y, None
         x, _ = jax.lax.scan(_maybe_remat(dec_body, remat), x, params["layers"])
 
@@ -215,12 +214,31 @@ def forward(params, cfg, batch, *, constrain=_no_constrain,
     return _logits(params, cfg, x, constrain), aux
 
 
+def forward(params, cfg, batch, *, constrain=_no_constrain,
+            use_pallas=None, remat: bool = False, last_only: bool = False):
+    """Teacher-forced forward. Returns (logits, aux_loss).
+
+    last_only: project logits for the final position only (prefill path —
+    avoids materializing the (B, S, V) tensor at 32k sequence lengths).
+
+    Kernels dispatch through ``repro.kernels.registry``; ``use_pallas`` is a
+    deprecated per-call override (True -> pallas, False -> xla)."""
+    with registry.use(_legacy(use_pallas, "forward")):
+        return _forward(params, cfg, batch, constrain=constrain, remat=remat,
+                        last_only=last_only)
+
+
 def loss_fn(params, cfg, batch, *, constrain=_no_constrain,
-            use_pallas: bool = False, remat: bool = False,
+            use_pallas=None, remat: bool = False,
             aux_weight: float = 0.01, vocab_chunks: int = 1):
-    """Next-token cross entropy (+ MoE load-balance aux)."""
-    logits, aux = forward(params, cfg, batch, constrain=constrain,
-                          use_pallas=use_pallas, remat=remat)
+    """Next-token cross entropy (+ MoE load-balance aux).
+
+    Runs the forward under ``registry.grad_safe()``: backends whose kernels
+    lack a custom VJP (pallas, today) are skipped for the differentiated
+    path, whatever the policy says."""
+    with registry.use(_legacy(use_pallas, "loss_fn")), registry.grad_safe():
+        logits, aux = _forward(params, cfg, batch, constrain=constrain,
+                               remat=remat)
     labels = batch["labels"]
     if cfg.family == "vlm":
         # loss over the text tail only
@@ -273,8 +291,8 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
     return cache
 
 
-def decode_step(params, cfg, cache, tokens, *, positions=None,
-                constrain=_no_constrain, use_pallas: bool = False):
+def _decode_step(params, cfg, cache, tokens, *, positions=None,
+                 constrain=_no_constrain):
     """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache).
 
     positions: optional (B,) int32 per-slot decode depths (continuous-batching
@@ -303,20 +321,17 @@ def decode_step(params, cfg, cache, tokens, *, positions=None,
             dense_cfg = cfg.scaled(d_ff=cfg.dense_d_ff)
             x, c0 = dense_block(params["dense0"], x, dense_cfg,
                                 pos_info=pos_info, cache=cache["dense0"],
-                                cache_pos=pos, constrain=constrain,
-                                use_pallas=use_pallas)
+                                cache_pos=pos, constrain=constrain)
             cache = dict(cache, dense0=c0)
 
         def body(x, inp):
             lp, cl = inp
             if fam == "moe":
                 y, nc, _ = moe_block(lp, x, cfg, pos_info=pos_info, cache=cl,
-                                     cache_pos=pos, constrain=constrain,
-                                     use_pallas=use_pallas)
+                                     cache_pos=pos, constrain=constrain)
             else:
                 y, nc = dense_block(lp, x, cfg, pos_info=pos_info, cache=cl,
-                                    cache_pos=pos, constrain=constrain,
-                                    use_pallas=use_pallas)
+                                    cache_pos=pos, constrain=constrain)
             return y, nc
         x, new_caches = jax.lax.scan(body, x, (params["layers"],
                                                cache["layers"]))
@@ -350,7 +365,7 @@ def decode_step(params, cfg, cache, tokens, *, positions=None,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                 head_dim=cfg.head_dim, positions=positions,
                 rope_theta=cfg.rope_theta, cache=skv, cache_pos=pos,
-                constrain=constrain, use_pallas=use_pallas)
+                constrain=constrain)
             return x + h, (new_st, new_skv)
         x, (new_st, new_skv) = jax.lax.scan(
             super_body, x, (params["layers"], cache["layers"],
@@ -363,8 +378,7 @@ def decode_step(params, cfg, cache, tokens, *, positions=None,
             y, nc = encdec.dec_block(lp, x, cfg, kv_cross=(cross["k"],
                                                            cross["v"]),
                                      positions=positions, cache=cl,
-                                     cache_pos=pos, constrain=constrain,
-                                     use_pallas=use_pallas)
+                                     cache_pos=pos, constrain=constrain)
             return y, nc
         x, new_caches = jax.lax.scan(body, x, (params["layers"],
                                                cache["layers"],
@@ -379,13 +393,31 @@ def decode_step(params, cfg, cache, tokens, *, positions=None,
     return logits, cache
 
 
+def decode_step(params, cfg, cache, tokens, *, positions=None,
+                constrain=_no_constrain, use_pallas=None):
+    """One decode step (see ``_decode_step`` for shapes/positions semantics).
+
+    Kernels dispatch through ``repro.kernels.registry``; ``use_pallas`` is a
+    deprecated per-call override."""
+    with registry.use(_legacy(use_pallas, "decode_step")):
+        return _decode_step(params, cfg, cache, tokens, positions=positions,
+                            constrain=constrain)
+
+
 def prefill_audio_cache(params, cfg, cache, enc_embeds, *,
-                        constrain=_no_constrain, use_pallas: bool = False):
+                        constrain=_no_constrain, use_pallas=None):
     """Run the whisper encoder and fill per-layer cross-attention K/V."""
+    with registry.use(_legacy(use_pallas, "prefill_audio_cache")):
+        return _prefill_audio_cache(params, cfg, cache, enc_embeds,
+                                    constrain=constrain)
+
+
+def _prefill_audio_cache(params, cfg, cache, enc_embeds, *,
+                         constrain=_no_constrain):
     enc = constrain(enc_embeds.astype(jnp.bfloat16), ("batch", None, None))
 
     def enc_body(h, lp):
-        return encdec.enc_block(lp, h, cfg, constrain, use_pallas), None
+        return encdec.enc_block(lp, h, cfg, constrain), None
     enc, _ = jax.lax.scan(enc_body, enc, params["encoder"])
     enc = rms_norm(enc, params["enc_ln"].astype(jnp.float32), cfg.norm_eps)
 

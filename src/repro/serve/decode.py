@@ -49,7 +49,7 @@ def init_decode_state(cache, num_slots: int) -> DecodeState:
 
 
 def make_decode_block(cfg, rules, *, k: int, max_len: int,
-                      eos_id: Optional[int] = None, use_pallas: bool = False):
+                      eos_id: Optional[int] = None, use_pallas=None):
     """Build the jitted k-step block.
 
     block(params, state, prompts, prompt_len, max_new, active) ->
@@ -62,6 +62,8 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
     """
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
+    # kernel backend resolved by make_serve_step (registry policy at build
+    # time; use_pallas is the deprecated per-build override, forwarded)
     serve = make_serve_step(cfg, rules, use_pallas=use_pallas)
 
     def block(params, state: DecodeState, prompts, prompt_len, max_new,

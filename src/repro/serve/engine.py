@@ -43,7 +43,7 @@ class Engine:
                  max_prompt: Optional[int] = None,
                  eos_id: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
-                 enc_len: Optional[int] = None, use_pallas: bool = False,
+                 enc_len: Optional[int] = None, use_pallas=None,
                  defrag_threshold: float = 0.5):
         self.params = params
         self.cfg = cfg

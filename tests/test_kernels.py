@@ -1,10 +1,15 @@
-"""Per-kernel shape/dtype sweeps: pallas_call (interpret=True on CPU) vs the
-pure-jnp ref.py oracle."""
+"""Per-kernel shape/dtype sweeps (pallas_call interpret=True on CPU vs the
+pure-jnp ref.py oracle) + the kernel-registry suite: dispatch parity across
+every registered op/backend, policy precedence, autotune cache plumbing, and
+the deprecated-kwarg shims."""
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import registry
 from repro.kernels.gram import ops as gram_ops, ref as gram_ref
 from repro.kernels.prox_step import ops as prox_ops, ref as prox_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
@@ -143,8 +148,10 @@ def test_ssd_kernel_sweep(Bt, S, H, P, N, chunk):
     B = jax.random.normal(ks[3], (Bt, S, N))
     C = jax.random.normal(ks[4], (Bt, S, N))
     y0, h0 = ssd_ref.ssd_sequential(x, dt, A, B, C)
-    y1, h1 = ssd_ops.ssd(x, dt, A, B, C, chunk=chunk)              # pallas
-    y2, h2 = ssd_ops.ssd(x, dt, A, B, C, chunk=chunk, use_kernel=False)
+    with registry.use("pallas"):
+        y1, h1 = ssd_ops.ssd(x, dt, A, B, C, chunk=chunk)
+    with registry.use("xla"):
+        y2, h2 = ssd_ops.ssd(x, dt, A, B, C, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=5e-4)
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), atol=5e-4)
     np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), atol=5e-4)
@@ -167,3 +174,242 @@ def test_ssd_decode_trajectory():
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_seq), atol=1e-4)
     np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_seq[:, -1]),
                                atol=1e-4)
+
+
+# ------------------------------------------------------- kernel registry ---
+
+EXPECTED_OPS = {"gram", "prox_step", "prox_loop", "flash_attention", "ssd"}
+
+#: make_inputs shape descriptors per op, including odd non-tile-multiple
+#: sizes (13, 33, 37, 65, 77, 130 ...) that exercise every pad/unpad path
+PARITY_SHAPES = {
+    "gram": [(8, 64), (13, 77), (130, 777)],
+    "prox_step": [(54,), (130,)],
+    "prox_loop": [(54,)],
+    "flash_attention": [(2, 33, 4, 16, 33, 2),     # odd seq, GQA
+                        (1, 1, 4, 40, 65, 2)],     # decode vs odd kv window
+    "ssd": [(1, 37, 2, 8, 4), (2, 64, 3, 16, 4)],
+}
+
+_TOL = {  # (f32 kwargs, bf16 kwargs); bf16 inputs lose mantissa up front
+    "gram": (dict(atol=1e-3, rtol=1e-5), dict(atol=16.0, rtol=2e-2)),
+    "prox_step": (dict(atol=1e-5), dict(atol=0.5, rtol=5e-2)),
+    "prox_loop": (dict(atol=1e-5), dict(atol=0.5, rtol=5e-2)),
+    "flash_attention": (dict(atol=2e-5), dict(atol=2e-2)),
+    "ssd": (dict(atol=5e-4), dict(atol=0.5, rtol=5e-2)),
+}
+
+
+def test_registry_table_covers_expected_ops():
+    assert EXPECTED_OPS <= set(registry.ops())
+    for op in EXPECTED_OPS:
+        assert set(registry.backends_of(op)) == {"pallas", "xla"}
+        assert registry.get_op(op).make_inputs is not None
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize(
+    "op,shape", [(op, shape) for op, shapes in sorted(PARITY_SHAPES.items())
+                 for shape in shapes])
+def test_registry_backend_parity(op, shape, dtype):
+    """Every registered backend of every op agrees with the xla reference,
+    through the same dispatch call sites production code uses."""
+    args, kw = registry.get_op(op).make_inputs(shape, dtype=dtype)
+    with registry.use("xla"):
+        want = registry.dispatch(op, *args, **kw)
+    tol = _TOL[op][0 if dtype == jnp.float32 else 1]
+    for backend in registry.backends_of(op):
+        if backend == "xla":
+            continue
+        with registry.use(backend):
+            got = registry.dispatch(op, *args, **kw)
+        jax.tree.map(
+            lambda g, w: np.testing.assert_allclose(
+                np.asarray(g, np.float32), np.asarray(w, np.float32), **tol),
+            got, want)
+
+
+def test_registry_use_overrides_env_and_restores(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "xla")
+    assert registry.policy() == "xla"
+    assert registry.resolved_backend() == "xla"
+    with registry.use("pallas"):
+        assert registry.resolved_backend() == "pallas"
+        with registry.use("ref"):                 # alias for xla
+            assert registry.resolved_backend() == "xla"
+        assert registry.resolved_backend() == "pallas"
+    assert registry.resolved_backend() == "xla"   # env restored
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    assert registry.resolved_backend() == "pallas"
+
+
+def test_registry_policy_precedence(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    try:
+        registry.set_backend("xla")               # process beats env
+        assert registry.resolved_backend() == "xla"
+        with registry.use("pallas"):              # context beats process
+            assert registry.resolved_backend() == "pallas"
+        assert registry.resolved_backend() == "xla"
+    finally:
+        registry.set_backend(None)
+    assert registry.resolved_backend() == "pallas"
+
+
+def test_registry_use_restores_on_exception():
+    before = registry.policy()
+    with pytest.raises(RuntimeError):
+        with registry.use("pallas"):
+            raise RuntimeError("boom")
+    assert registry.policy() == before
+
+
+def test_registry_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        with registry.use("cuda"):
+            pass
+    with pytest.raises(ValueError):
+        registry.set_backend("tensorrt")
+
+
+def test_forced_pallas_falls_back_for_dynamic_mask():
+    """flash_attention's pallas impl only does static masks; a dynamic
+    kv_valid_len under a forced pallas policy must silently take the XLA
+    path and match it bitwise."""
+    from repro.models.attention import attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16))
+    k = jax.random.normal(ks[1], (2, 48, 2, 16))
+    v = jax.random.normal(ks[2], (2, 48, 2, 16))
+    valid = jnp.asarray([17, 33], jnp.int32)
+    with registry.use("pallas"):
+        got = attention(q, k, v, causal=False, kv_valid_len=valid, chunk=16)
+    with registry.use("xla"):
+        want = attention(q, k, v, causal=False, kv_valid_len=valid, chunk=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_grad_safe_skips_non_differentiable_backends():
+    """Under a forced pallas policy, grad_safe() (entered by loss_fn) must
+    route dispatch to the differentiable XLA impl — gradients match the
+    plain-xla ones bitwise."""
+    (x, dt, A, B, C), _ = registry.get_op("ssd").make_inputs((1, 16, 2, 8, 4))
+
+    def loss(x):
+        y, _ = registry.dispatch("ssd", x, dt, A, B, C, chunk=8)
+        return (y.astype(jnp.float32) ** 2).sum()
+
+    with registry.use("pallas"), registry.grad_safe():
+        g_pallas_policy = jax.grad(loss)(x)
+    with registry.use("xla"):
+        g_xla = jax.grad(loss)(x)
+    np.testing.assert_array_equal(np.asarray(g_pallas_policy),
+                                  np.asarray(g_xla))
+
+
+def test_autotune_writes_and_dispatch_consumes_cache(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    registry.reload_tuned()
+    try:
+        results = registry.autotune("gram", [(16, 64)], backends=["pallas"],
+                                    iters=1, warmup=1)
+        assert cache.exists()
+        on_disk = json.loads(cache.read_text())
+        assert results and set(results) <= set(on_disk)
+        (key, entry), = results.items()
+        assert key.startswith("gram|pallas|16x64|")
+        assert set(entry["params"]) <= {"bd", "bm"} and entry["us"] > 0
+        # dispatch picks the tuned block sizes up (and stays correct)
+        Xs = jax.random.normal(KEY, (16, 64))
+        with registry.use("pallas"):
+            got = registry.dispatch("gram", Xs)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(gram_ref.gram(Xs)), atol=1e-4)
+        # explicit kwargs beat the cache
+        with registry.use("pallas"):
+            got2 = registry.dispatch("gram", Xs, bd=8, bm=128)
+        np.testing.assert_allclose(np.asarray(got2),
+                                   np.asarray(gram_ref.gram(Xs)), atol=1e-4)
+    finally:
+        registry.reload_tuned()
+
+
+def test_solver_trajectories_ulp_identical_under_each_backend():
+    """CA-vs-classical parity is backend-independent: both solvers pin the
+    same resolved policy, so the ~1-ulp identity (same tolerance as
+    tests/test_core.py — vmapped Gram blocks may reassociate) holds under
+    forced pallas exactly as under xla."""
+    from repro.core import (LassoProblem, SolverConfig, sfista, ca_sfista,
+                            spnm, ca_spnm)
+    ks = jax.random.split(KEY, 2)
+    X = jax.random.normal(ks[0], (8, 96))
+    w_true = jnp.zeros((8,)).at[:3].set(1.0)
+    y = X.T @ w_true
+    problem = LassoProblem(X=X, y=y, lam=0.05)
+    cfg = SolverConfig(T=16, k=4, b=0.25, Q=3)
+    for backend in ("xla", "pallas"):
+        with registry.use(backend):
+            np.testing.assert_allclose(
+                np.asarray(sfista(problem, cfg, KEY)),
+                np.asarray(ca_sfista(problem, cfg, KEY)), atol=5e-6, rtol=0,
+                err_msg=f"sfista vs ca_sfista diverged under {backend}")
+            np.testing.assert_allclose(
+                np.asarray(spnm(problem, cfg, KEY)),
+                np.asarray(ca_spnm(problem, cfg, KEY)), atol=5e-6, rtol=0,
+                err_msg=f"spnm vs ca_spnm diverged under {backend}")
+
+
+def test_ca_solver_validates_T_divisible_by_k():
+    from repro.core import LassoProblem, SolverConfig, ca_sfista, ca_spnm
+    with pytest.raises(ValueError, match="multiple of k"):
+        SolverConfig(T=100, k=8)                  # caught at construction
+    # a cfg mutated past __post_init__ still gets a clear solver-side error
+    cfg = SolverConfig(T=96, k=8)
+    object.__setattr__(cfg, "k", 7)
+    X = jax.random.normal(KEY, (4, 32))
+    problem = LassoProblem(X=X, y=X.T @ jnp.ones((4,)), lam=0.1)
+    for solver in (ca_sfista, ca_spnm):
+        with pytest.raises(ValueError, match="divisible by cfg.k"):
+            solver(problem, cfg, KEY)
+
+
+def test_deprecated_shims_warn_and_match():
+    from repro.core import LassoProblem, SolverConfig, ca_sfista
+    from repro.models.attention import attention, attention_fn
+    ks = jax.random.split(KEY, 2)
+    X = jax.random.normal(ks[0], (6, 64))
+    problem = LassoProblem(X=X, y=X.T @ jnp.ones((6,)), lam=0.1)
+    cfg = SolverConfig(T=8, k=4, b=0.25)
+    want = ca_sfista(problem, cfg, KEY)
+    with pytest.warns(DeprecationWarning):
+        got = ca_sfista(problem, cfg, KEY, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    with pytest.warns(DeprecationWarning):
+        got = ca_sfista(problem, cfg, KEY, backend="jnp")   # legacy alias
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+    with pytest.warns(DeprecationWarning):
+        ssd_ops.ssd(*registry.get_op("ssd").make_inputs((1, 8, 2, 4, 4))[0],
+                    use_kernel=False)
+    with pytest.warns(DeprecationWarning):
+        fn = attention_fn(False)
+    q = jax.random.normal(ks[1], (1, 8, 2, 8))
+    np.testing.assert_array_equal(
+        np.asarray(fn(q, q, q)),
+        np.asarray(attention(q, q, q)))
+
+
+def test_shared_pad_helpers():
+    from repro.kernels import pad
+    assert pad.round_up(1, 8) == 8 and pad.round_up(16, 8) == 16
+    x = jnp.ones((3, 5))
+    p = pad.pad_dims(x, {0: 8, 1: 5})
+    assert p.shape == (8, 5) and float(p[3:].sum()) == 0.0
+    assert pad.pad_dims(x, {0: 3}) is x            # no-op fast path
+    assert pad.pad_to_multiple(x, 1, 4).shape == (3, 8)
+    np.testing.assert_array_equal(
+        np.asarray(pad.unpad_dims(p, {0: 3})), np.asarray(x))
+    with pytest.raises(ValueError):
+        pad.pad_dims(x, {0: 2})
