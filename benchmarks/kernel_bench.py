@@ -1,18 +1,24 @@
-"""Kernel microbenchmarks: the registry op table swept per backend.
+"""Kernel microbenchmarks: the registry op table swept per backend,
+forward AND backward.
 
 Iterates every registered op over representative shapes and times each
 available backend through the same ``registry.dispatch`` call sites
 production code uses — the per-op timing table CI archives as
-``BENCH_kernels.json``. On this CPU host the ``pallas`` column runs in
-interpret mode (a dispatch-overhead/correctness signal, not a perf target);
-``xla`` wall times are the comparable numbers. Shapes where the requested
-backend would silently fall back (unsupported call) are skipped.
+``BENCH_kernels.json``. Each op/backend/shape cell emits two rows:
+``.../fwd`` (the plain dispatch) and ``.../bwd`` (``jax.grad`` of a scalar
+loss through the dispatch — the pallas column runs the custom-VJP backward
+kernels). On this CPU host the ``pallas`` column runs in interpret mode (a
+dispatch-overhead/correctness signal, not a perf target); ``xla`` wall
+times are the comparable numbers. Shapes where the requested backend would
+silently fall back (unsupported call) are skipped, as is ``bwd`` for impls
+without a VJP.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import time_fn, emit
 from repro.kernels import registry
@@ -43,6 +49,12 @@ def _dispatch_under(op: str, backend: str, kw: dict, *args):
         return registry.dispatch(op, *args, **kw)
 
 
+def _loss_under(op: str, backend: str, kw: dict, *args):
+    out = _dispatch_under(op, backend, kw, *args)
+    return sum(jnp.sum(jnp.asarray(leaf).astype(jnp.float32))
+               for leaf in jax.tree.leaves(out))
+
+
 def run():
     for op in registry.ops():
         meta = registry.get_op(op)
@@ -51,21 +63,37 @@ def run():
         for backend in registry.backends_of(op):
             sweep = PALLAS_SWEEP if backend == "pallas" else SWEEP
             for label, shape in sweep.get(op, []):
-                args, kw = meta.make_inputs(shape)
                 try:
+                    args, kw = meta.make_inputs(shape)
                     with registry.use(backend):
-                        if registry.select(op, *args, **kw).backend != backend:
-                            continue        # would silently fall back: skip
-                    f = jax.jit(functools.partial(_dispatch_under, op,
-                                                  backend, kw))
-                    t = time_fn(f, *args, iters=3, warmup=1)
+                        impl = registry.select(op, *args, **kw)
+                    if impl.backend != backend:
+                        continue            # would silently fall back: skip
+                    passes = [("fwd", jax.jit(functools.partial(
+                        _dispatch_under, op, backend, kw)))]
+                    if impl.differentiable:
+                        # grad over every float arg: argnum-0-only would let
+                        # jit DCE part of the backward (e.g. flash's dkv)
+                        passes.append(("bwd", jax.jit(jax.grad(
+                            functools.partial(_loss_under, op, backend, kw),
+                            argnums=registry.grad_argnums(args)))))
                 except Exception as e:      # noqa: BLE001 - report, don't die
                     # -1 sentinel, not NaN: json.dump would emit a bare NaN
                     # literal and break strict-JSON consumers of the artifact
-                    emit(f"kernel/{op}/{backend}/{label}", -1.0,
-                         f"error={type(e).__name__}")
+                    # (both rows, so neither perf series silently vanishes)
+                    for direction in ("fwd", "bwd"):
+                        emit(f"kernel/{op}/{backend}/{label}/{direction}",
+                             -1.0, f"error={type(e).__name__}")
                     continue
-                emit(f"kernel/{op}/{backend}/{label}", t * 1e6, "")
+                for direction, f in passes:
+                    try:
+                        t = time_fn(f, *args, iters=3, warmup=1)
+                    except Exception as e:  # noqa: BLE001 - report, don't die
+                        emit(f"kernel/{op}/{backend}/{label}/{direction}",
+                             -1.0, f"error={type(e).__name__}")
+                        continue
+                    emit(f"kernel/{op}/{backend}/{label}/{direction}",
+                         t * 1e6, "")
 
 
 if __name__ == "__main__":

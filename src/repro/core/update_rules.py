@@ -63,5 +63,8 @@ def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
     """
     with registry.use(registry.legacy_backend(use_kernel,
                                               owner="pnm_update")):
-        z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q)
+        # Q rides as a kwarg: the custom-VJP wiring binds kwargs statically,
+        # so the fused pallas loop stays differentiable (a positional Q would
+        # become a traced primal and break reverse-mode through fori_loop)
+        z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q=Q)
     return IterState(w_prev=state.w, w=z, j=state.j + 1)

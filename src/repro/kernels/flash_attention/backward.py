@@ -1,0 +1,190 @@
+"""Pallas TPU kernels: FlashAttention-2-style backward pass.
+
+Two kernels, mirroring the FA-2 work split (no dq/dk write races, no atomics):
+
+* ``flash_dq``  — grid (B*Hq, Sq/bq, Skv/bk), kv innermost: each q tile keeps
+  a (bq x d) fp32 dq accumulator in VMEM across its kv sweep.
+* ``flash_dkv`` — grid (B*Hq, Skv/bk, Sq/bq), q innermost: each kv tile keeps
+  (bk x d) fp32 dk/dv accumulators across its q sweep. GQA is handled by
+  accumulating per *query* head (the kv-head index maps mirror the forward)
+  and summing the group outside the kernel — no cross-program accumulation.
+
+Both kernels recompute the (bq x bk) score tile from q/k and turn it into
+probabilities with the forward's saved per-row logsumexp (p = exp(s - lse)),
+so no O(Sq x Skv) tensor is ever materialized. The causal block-skipping is
+the transpose of the forward's: dq skips kv blocks strictly above the masked
+diagonal, dk/dv skips q blocks strictly below it. With delta = rowsum(do*o):
+
+    ds = p * (do v^T - delta),   dq = scale * ds k,
+    dk = scale * ds^T q,         dv = p^T do.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _score_probs(q_ref, k_ref, lse_ref, *, scale, causal, bq, bk, iq, ik,
+                 kv_len, q_offset):
+    """Recomputed probability tile p = exp(s - lse), masked like the fwd."""
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len
+    if causal:
+        qpos = iq * bq + q_offset + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        mask = mask & (qpos >= kpos)
+    p = jnp.where(mask, jnp.exp(s - lse_ref[0, 0]), 0.0)
+    return q, k, p
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale: float, causal: bool, bq: int, bk: int,
+               kv_blocks: int, kv_len: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        run = (ik * bk) <= (iq * bq + bq - 1 + q_offset)
+    else:
+        run = (ik * bk) < kv_len
+
+    @pl.when(run)
+    def _compute():
+        _, k, p = _score_probs(q_ref, k_ref, lse_ref, scale=scale,
+                               causal=causal, bq=bq, bk=bk, iq=iq, ik=ik,
+                               kv_len=kv_len, q_offset=q_offset)
+        do = do_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        dp = jax.lax.dot_general(do, v_ref[0, 0].astype(jnp.float32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0])                  # (bq, bk)
+        acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, 0, :, :] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                dv_ref, dk_acc, dv_acc, *, scale: float, causal: bool,
+                bq: int, bk: int, q_blocks: int, kv_len: int, q_offset: int):
+    ik = pl.program_id(1)
+    iq = pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    if causal:
+        run = (iq * bq + bq - 1 + q_offset) >= (ik * bk)
+    else:
+        run = (ik * bk) < kv_len
+
+    @pl.when(run)
+    def _compute():
+        q, _, p = _score_probs(q_ref, k_ref, lse_ref, scale=scale,
+                               causal=causal, bq=bq, bk=bk, iq=iq, ik=ik,
+                               kv_len=kv_len, q_offset=q_offset)
+        do = do_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bk, d)
+        dp = jax.lax.dot_general(do, v_ref[0, 0].astype(jnp.float32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0])
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bk, d)
+
+    @pl.when(iq == q_blocks - 1)
+    def _finalize():
+        dk_ref[0, 0, :, :] = (dk_acc[...] * scale).astype(dk_ref.dtype)
+        dv_ref[0, 0, :, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "bq", "bk", "kv_len", "q_offset", "interpret"))
+def flash_dq(q, k, v, do, lse, delta, *, causal: bool, scale: float, bq: int,
+             bk: int, kv_len: int, q_offset: int, interpret: bool = True):
+    """dq of padded flash attention. q/do (B,Hq,Sq,D); k,v (B,Hkv,Skv,D);
+    lse/delta (B,Hq,Sq,1) fp32; shapes block-aligned (ops.py pads)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    grid = (B * Hq, Sq // bq, Skv // bk)
+
+    kernel = functools.partial(
+        _dq_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        kv_blocks=Skv // bk, kv_len=kv_len, q_offset=q_offset)
+    q_spec = pl.BlockSpec((1, 1, bq, D),
+                          lambda bh, iq, ik: (bh // Hq, bh % Hq, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, D),
+                           lambda bh, iq, ik: (bh // Hq, (bh % Hq) // group,
+                                               ik, 0))
+    row_spec = pl.BlockSpec((1, 1, bq, 1),
+                            lambda bh, iq, ik: (bh // Hq, bh % Hq, iq, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "bq", "bk", "kv_len", "q_offset", "interpret"))
+def flash_dkv(q, k, v, do, lse, delta, *, causal: bool, scale: float, bq: int,
+              bk: int, kv_len: int, q_offset: int, interpret: bool = True):
+    """Per-query-head dk/dv, both (B, Hq, Skv, D) — the caller reduces the
+    GQA group (sum over Hq // Hkv) down to the kv heads."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    grid = (B * Hq, Skv // bk, Sq // bq)
+
+    kernel = functools.partial(
+        _dkv_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        q_blocks=Sq // bq, kv_len=kv_len, q_offset=q_offset)
+    q_spec = pl.BlockSpec((1, 1, bq, D),
+                          lambda bh, ik, iq: (bh // Hq, bh % Hq, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, D),
+                           lambda bh, ik, iq: (bh // Hq, (bh % Hq) // group,
+                                               ik, 0))
+    row_spec = pl.BlockSpec((1, 1, bq, 1),
+                            lambda bh, ik, iq: (bh // Hq, bh % Hq, iq, 0))
+    dkv_spec = pl.BlockSpec((1, 1, bk, D),
+                            lambda bh, ik, iq: (bh // Hq, bh % Hq, ik, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=[dkv_spec, dkv_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Skv, D), k.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Skv, D), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)

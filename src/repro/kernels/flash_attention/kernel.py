@@ -25,9 +25,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, bq: int, bk: int,
-                  kv_blocks: int, kv_len: int, q_offset: int):
+def _flash_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, scale: float, causal: bool, bq: int, bk: int,
+                kv_blocks: int, kv_len: int, q_offset: int):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -74,21 +74,54 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)              # fully-masked rows -> 0
         o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if lse_ref is not None:
+            # per-row logsumexp of the masked scores: the backward kernels
+            # recompute p = exp(s - lse) from it tile-by-tile (FA-2)
+            lse_ref[0, 0, :, :] = m_ref[...] + jnp.log(l)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, **kw):
+    _flash_body(q_ref, k_ref, v_ref, o_ref, None, acc_ref, m_ref, l_ref, **kw)
+
+
+def _flash_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                      l_ref, **kw):
+    _flash_body(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                **kw)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "bq", "bk", "kv_len", "q_offset", "interpret"))
+    "causal", "scale", "bq", "bk", "kv_len", "q_offset", "interpret",
+    "return_lse"))
 def flash_attention(q, k, v, *, causal: bool, scale: float, bq: int, bk: int,
-                    kv_len: int, q_offset: int, interpret: bool = True):
+                    kv_len: int, q_offset: int, interpret: bool = True,
+                    return_lse: bool = False):
     """Padded flash attention. q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D); Sq % bq == 0,
-    Skv % bk == 0, D MXU-aligned (ops.py guarantees). kv_len = unpadded Skv."""
+    Skv % bk == 0, D MXU-aligned (ops.py guarantees). kv_len = unpadded Skv.
+
+    return_lse: also return the per-row logsumexp (B, Hq, Sq, 1) fp32 — the
+    residual the custom-VJP backward consumes. The plain forward keeps a
+    single output (no extra write)."""
     B, Hq, Sq, D = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     group = Hq // Hkv
     grid = (B * Hq, Sq // bq, Skv // bk)
 
+    o_spec = pl.BlockSpec((1, 1, bq, D),
+                          lambda bh, iq, ik: (bh // Hq, bh % Hq, iq, 0))
+    out_specs, out_shape = o_spec, jax.ShapeDtypeStruct(q.shape, q.dtype)
+    body = _flash_kernel
+    if return_lse:
+        body = _flash_kernel_lse
+        out_specs = [o_spec,
+                     pl.BlockSpec((1, 1, bq, 1),
+                                  lambda bh, iq, ik: (bh // Hq, bh % Hq,
+                                                      iq, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B, Hq, Sq, 1), jnp.float32)]
+
     kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        body, scale=scale, causal=causal, bq=bq, bk=bk,
         kv_blocks=Skv // bk, kv_len=kv_len, q_offset=q_offset)
 
     return pl.pallas_call(
@@ -102,9 +135,8 @@ def flash_attention(q, k, v, *, causal: bool, scale: float, bq: int, bk: int,
             pl.BlockSpec((1, 1, bk, D),
                          lambda bh, iq, ik: (bh // Hq, (bh % Hq) // group, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, D),
-                               lambda bh, iq, ik: (bh // Hq, bh % Hq, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, D), jnp.float32),   # acc
             pltpu.VMEM((bq, 1), jnp.float32),   # running max m

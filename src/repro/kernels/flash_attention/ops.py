@@ -1,9 +1,19 @@
 """Public wrapper for flash attention: padding (seq to block multiples, head
-dim to 128 lanes), GQA validation, interpret-mode dispatch on CPU.
+dim to 128 lanes), GQA validation, interpret-mode dispatch on CPU — now for
+the backward pass too.
 
 Zero-padding is exact: padded head-dim lanes contribute 0 to q.k and produce
 0 output lanes (sliced off); padded kv rows are masked to -inf in-kernel;
-padded q rows produce garbage rows that are sliced off.
+padded q rows produce garbage rows that are sliced off. The backward kernels
+re-pad independently (their ``bq_bwd``/``bk_bwd`` block sizes are separate
+tunables), which is safe because padded ``do`` rows are zero and padded kv
+columns are masked out of the recomputed probability tiles.
+
+``flash_attention`` carries a :func:`jax.custom_vjp` (wired by
+``registry.custom_vjp_fn``): the forward saves the per-row logsumexp, the
+backward recomputes score tiles inside ``backward.flash_dq`` /
+``backward.flash_dkv`` — differentiating it never touches a ``pallas_call``
+interior.
 
 This wrapper keeps the kernel's (B, H, S, D) layout; the registry op
 ``flash_attention`` (model layout, XLA fallback) is registered by
@@ -11,12 +21,11 @@ This wrapper keeps the kernel's (B, H, S, D) layout; the registry op
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import pad
+from repro.kernels import pad, registry
+from repro.kernels.flash_attention import backward as _kb
 from repro.kernels.flash_attention import kernel as _k
 
 DEFAULT_BQ = 512
@@ -24,14 +33,8 @@ DEFAULT_BK = 512
 LANE = 128
 
 
-def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
-                    bq: int | None = None, bk: int | None = None,
-                    interpret: bool | None = None):
-    """GQA flash attention. q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) -> (B,Hq,Sq,D).
-
-    For decode (Sq < Skv) the causal mask is right-aligned: query i attends to
-    keys [0, Skv - Sq + i].
-    """
+def _prep(q, k, v, scale, bq, bk, interpret):
+    """Resolved (padded q/k/v, kernel kwargs) shared by fwd and bwd."""
     B, Hq, Sq, D = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     if Hq % Hkv:
@@ -46,8 +49,78 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
     qp = pad.pad_dims(q, {2: pad.round_up(Sq, bq), 3: Dp})
     kp = pad.pad_dims(k, {2: pad.round_up(Skv, bk), 3: Dp})
     vp = pad.pad_dims(v, {2: pad.round_up(Skv, bk), 3: Dp})
+    kw = dict(scale=scale, bq=bq, bk=bk, kv_len=Skv, q_offset=Skv - Sq,
+              interpret=interpret)
+    return qp, kp, vp, kw
 
-    out = _k.flash_attention(
-        qp, kp, vp, causal=causal, scale=scale, bq=bq, bk=bk,
-        kv_len=Skv, q_offset=Skv - Sq, interpret=interpret)
+
+def _flash_attention_impl(q, k, v, *, causal: bool = True,
+                          scale: float | None = None, bq: int | None = None,
+                          bk: int | None = None, bq_bwd: int | None = None,
+                          bk_bwd: int | None = None,
+                          interpret: bool | None = None):
+    del bq_bwd, bk_bwd                          # backward-only tunables
+    Sq, D = q.shape[2], q.shape[3]
+    qp, kp, vp, kw = _prep(q, k, v, scale, bq, bk, interpret)
+    out = _k.flash_attention(qp, kp, vp, causal=causal, **kw)
     return pad.unpad_dims(out, {2: Sq, 3: D})
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        scale: float | None = None, bq: int | None = None,
+                        bk: int | None = None, bq_bwd: int | None = None,
+                        bk_bwd: int | None = None,
+                        interpret: bool | None = None):
+    """custom_vjp fwd: run the kernel with ``return_lse`` and save
+    (q, k, v, o, lse) — all unpadded — as residuals."""
+    del bq_bwd, bk_bwd
+    Sq, D = q.shape[2], q.shape[3]
+    qp, kp, vp, kw = _prep(q, k, v, scale, bq, bk, interpret)
+    out, lse = _k.flash_attention(qp, kp, vp, causal=causal, return_lse=True,
+                                  **kw)
+    o = pad.unpad_dims(out, {2: Sq, 3: D})
+    return o, (q, k, v, o, pad.unpad_dims(lse, {2: Sq}))
+
+
+def flash_attention_bwd(res, do, *, causal: bool = True,
+                        scale: float | None = None, bq: int | None = None,
+                        bk: int | None = None, bq_bwd: int | None = None,
+                        bk_bwd: int | None = None,
+                        interpret: bool | None = None):
+    """custom_vjp bwd: (dq, dk, dv) via the FA-2-style backward kernels."""
+    q, k, v, o, lse = res
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qp, kp, vp, kw = _prep(q, k, v, scale, bq_bwd or bq, bk_bwd or bk,
+                           interpret)
+    Sqp, Dp = qp.shape[2], qp.shape[3]
+    dop = pad.pad_dims(do, {2: Sqp, 3: Dp})
+    # delta = rowsum(do * o): the constant FA-2 subtracts inside ds
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1, keepdims=True)
+    delta = pad.pad_dims(delta, {2: Sqp})
+    lsep = pad.pad_dims(lse, {2: Sqp})
+
+    dq = _kb.flash_dq(qp, kp, vp, dop, lsep, delta, causal=causal, **kw)
+    dkh, dvh = _kb.flash_dkv(qp, kp, vp, dop, lsep, delta, causal=causal,
+                             **kw)
+    # reduce the per-query-head dk/dv over the GQA group -> kv heads
+    Skvp = kp.shape[2]
+    dk = dkh.reshape(B, Hkv, group, Skvp, Dp).sum(axis=2)
+    dv = dvh.reshape(B, Hkv, group, Skvp, Dp).sum(axis=2)
+    dq = pad.unpad_dims(dq, {2: Sq, 3: D}).astype(q.dtype)
+    dk = pad.unpad_dims(dk, {2: Skv, 3: D}).astype(k.dtype)
+    dv = pad.unpad_dims(dv, {2: Skv, 3: D}).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention = registry.custom_vjp_fn(
+    _flash_attention_impl, flash_attention_fwd, flash_attention_bwd)
+flash_attention.__doc__ = """GQA flash attention with a custom VJP.
+q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) -> (B,Hq,Sq,D).
+
+For decode (Sq < Skv) the causal mask is right-aligned: query i attends to
+keys [0, Skv - Sq + i]. ``bq``/``bk`` block the forward, ``bq_bwd``/
+``bk_bwd`` the backward kernels (``None``: forward sizes, then defaults).
+"""

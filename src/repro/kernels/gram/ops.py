@@ -2,7 +2,9 @@
 dispatches Pallas (interpret on CPU, compiled on TPU), unpads.
 
 Registers the ``gram`` op: ``pallas`` is the tiled SYRK kernel below,
-``xla`` is the pure-jnp oracle (fp32 accumulation either way)."""
+``xla`` is the pure-jnp oracle (fp32 accumulation either way). G = Xs Xs^T
+is symmetric-linear in Xs, so the pallas impl carries the analytic VJP
+dXs = (dG + dG^T) Xs — no kernel recomputation needed."""
 from __future__ import annotations
 
 import functools
@@ -36,6 +38,16 @@ def _gram_xla(Xs: jax.Array, *, bd=None, bm=None, interpret=None) -> jax.Array:
     return _ref.gram(Xs)
 
 
+def _gram_fwd(Xs, **kw):
+    return gram(Xs, **kw), Xs
+
+
+def _gram_bwd(Xs, dG, **kw):
+    dXs = jnp.dot(dG + dG.T, Xs.astype(dG.dtype),
+                  preferred_element_type=jnp.float32)
+    return (dXs.astype(Xs.dtype),)
+
+
 # ------------------------------------------------------------ registry ----
 
 def _make_inputs(shape, dtype=jnp.float32):
@@ -56,5 +68,5 @@ def _candidates(backend, shape):
 registry.describe("gram", shape_of=lambda Xs, **kw: tuple(Xs.shape),
                   make_inputs=_make_inputs, candidates=_candidates)
 registry.register("gram", "pallas", tunables=("bd", "bm"),
-                  differentiable=False)(gram)
+                  vjp=(_gram_fwd, _gram_bwd))(gram)
 registry.register("gram", "xla")(_gram_xla)

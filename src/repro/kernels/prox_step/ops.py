@@ -4,7 +4,15 @@
 Registers the ``prox_step`` / ``prox_loop`` ops: ``pallas`` keeps the Gram
 VMEM-resident across the fused update(s) (per-call ``supports`` rejects
 d > VMEM_MAX_D), ``xla`` is the pure-jnp path that is bit-identical to the
-solvers' historical inline update."""
+solvers' historical inline update.
+
+Both pallas impls carry a recompute-based custom VJP that differentiates the
+soft-threshold subgradient of the *ref.py* path (``jax.vjp`` over the jnp
+oracle, which is arithmetically the same update) — the forward stays fused
+in VMEM, the backward is a couple of matvecs. Differentiated call sites must
+pass ``prox_loop``'s ``Q`` as a keyword: kwargs are bound statically by the
+custom-VJP wiring, while a positional ``Q`` becomes a traced primal and
+``fori_loop`` with a traced bound has no reverse-mode rule."""
 from __future__ import annotations
 
 import functools
@@ -55,6 +63,21 @@ def prox_loop(G, R, z0, t, lam, Q: int, interpret: bool | None = None):
     return _k.prox_loop(Gp, Rp, zp, scal, Q=Q, interpret=interpret).reshape(z0.shape)
 
 
+def _recompute_vjp(fused_fn, ref_fn):
+    """(fwd, bwd) pair: pallas forward, backward = jax.vjp of the ref path
+    over the saved primal inputs (soft-threshold subgradient semantics)."""
+    def fwd(*args, **kw):
+        return fused_fn(*args, **kw), args
+
+    def bwd(res, g, **kw):
+        kw.pop("interpret", None)              # pallas-only; ref.py takes none
+        out, pullback = jax.vjp(functools.partial(ref_fn, **kw), *res)
+        # the fused forward always emits fp32; the ref path follows the
+        # input dtype — align the cotangent before pulling it back
+        return pullback(g.astype(out.dtype))
+    return fwd, bwd
+
+
 # ------------------------------------------------------------ registry ----
 
 def _make_step_inputs(shape, dtype=jnp.float32):
@@ -79,8 +102,8 @@ registry.describe("prox_step", shape_of=lambda G, *a, **kw: tuple(G.shape),
 registry.describe("prox_loop", shape_of=lambda G, *a, **kw: tuple(G.shape),
                   make_inputs=_make_loop_inputs)
 registry.register("prox_step", "pallas", supports=_fits_vmem,
-                  differentiable=False)(prox_step)
+                  vjp=_recompute_vjp(prox_step, _ref.prox_step))(prox_step)
 registry.register("prox_step", "xla")(_ref.prox_step)
 registry.register("prox_loop", "pallas", supports=_fits_vmem,
-                  differentiable=False)(prox_loop)
+                  vjp=_recompute_vjp(prox_loop, _ref.prox_loop))(prox_loop)
 registry.register("prox_loop", "xla")(_ref.prox_loop)

@@ -22,9 +22,14 @@ Dispatch semantics:
   ``xla`` silently — forcing ``REPRO_BACKEND=pallas`` runs the Pallas kernels
   wherever they apply and the XLA paths everywhere else (e.g. decode steps
   with a dynamic ``kv_valid_len``, which the static-masked kernel cannot do).
-* Inside :func:`grad_safe` (entered by ``models.loss_fn``) impls registered
-  with ``differentiable=False`` are skipped: the Pallas kernels carry no
-  custom VJP yet, so training always differentiates the XLA paths.
+* An impl registered with a ``vjp=(fwd, bwd)`` pair is wired through
+  :func:`jax.custom_vjp` at registration (see :func:`custom_vjp_fn`), so the
+  kernels are differentiable end-to-end — ``jax.grad`` through a dispatch
+  traces the registered backward kernels instead of attempting (and failing)
+  to differentiate a ``pallas_call``. Inside :func:`grad_safe` (entered by
+  ``models.loss_fn``) the few impls that still carry ``differentiable=False``
+  (no VJP) are skipped — a narrow per-impl guard, not a training-wide XLA
+  switch.
 * Policy is resolved at *trace* time. jit-ted entry points therefore pin the
   resolved backend for the whole trace (see the solver wrappers in
   ``repro.core``, which also key their jit cache by the resolved name so a
@@ -40,6 +45,14 @@ Cache file format — one entry per (op, backend, shape, device kind)::
 
     {"gram|pallas|54x5810|cpu": {"params": {"bd": 64, "bm": 512},
                                  "us": 812.4}}
+
+Backward block sizes are tunables of their own: ``autotune(op, shapes,
+grad=True)`` times a ``jax.grad`` through the dispatch and persists winners
+under a separate ``<op>+bwd|backend|shape|device`` key, from which dispatch
+fills the impl's ``bwd_tunables`` (e.g. flash attention's ``bq_bwd`` /
+``bk_bwd``). Entries keyed by an unresolved device kind (``unknown``) are
+never persisted — the kind is re-resolved lazily at every lookup, so a cache
+written before backend init cannot poison later real-device runs.
 """
 from __future__ import annotations
 
@@ -55,6 +68,7 @@ import warnings
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 #: canonical backend names, in "auto" preference order on TPU
 BACKENDS = ("pallas", "xla")
@@ -81,6 +95,8 @@ def _always_true(*_args: Any, **_kw: Any) -> bool:
 class Impl:
     """One backend implementation of a registered op."""
     backend: str
+    #: the callable dispatch runs. When the impl was registered with a
+    #: ``vjp`` pair this is the custom_vjp-wrapped function, not the raw one.
     fn: Callable
     #: process-level capability (e.g. a future GPU backend probing its
     #: toolchain). Checked once per dispatch.
@@ -92,6 +108,12 @@ class Impl:
     differentiable: bool = True
     #: kwarg names the autotuner may fill when the caller passes None.
     tunables: Tuple[str, ...] = ()
+    #: the (fwd, bwd) pair registration wired through jax.custom_vjp, kept
+    #: for introspection (None for natively-differentiable impls).
+    vjp: Optional[Tuple[Callable, Callable]] = None
+    #: backward-pass kwarg names the grad-mode autotuner may fill (their
+    #: winners live under the separate "<op>+bwd|..." cache keys).
+    bwd_tunables: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -107,6 +129,9 @@ class Op:
     make_inputs: Optional[Callable] = None
     #: (backend, shape) -> [kwargs, ...] candidate tunable settings.
     candidates: Optional[Callable] = None
+    #: (backend, shape) -> [kwargs, ...] candidate backward-tunable settings
+    #: (consumed by ``autotune(grad=True)``).
+    bwd_candidates: Optional[Callable] = None
 
     def backends(self) -> List[str]:
         return [b for b in BACKENDS if b in self.impls]
@@ -138,33 +163,80 @@ def _op(name: str) -> Op:
     return _OPS.setdefault(name, Op(name))
 
 
+def custom_vjp_fn(fn: Callable, fwd: Callable, bwd: Callable) -> Callable:
+    """Wrap ``fn`` with :func:`jax.custom_vjp`, binding kwargs as static
+    configuration.
+
+    ``jax.custom_vjp`` does not accept keyword arguments, but registry ops
+    take their differentiable operands positionally and their configuration
+    (block sizes, flags) as keywords. This helper partials ``fn``/``fwd``/
+    ``bwd`` over each call's kwargs (one wrapper per distinct hashable kwargs
+    combination, cached) so only the positional args are primals.
+
+    Conventions: ``fwd(*args, **kw) -> (out, residuals)``;
+    ``bwd(residuals, cotangent, **kw) -> tuple`` of one cotangent per
+    positional arg. Static integers that steer trace-time control flow (e.g.
+    ``prox_loop``'s ``Q``) must be passed as kwargs by differentiated call
+    sites, or they become traced primals.
+    """
+    cache: Dict[Any, Callable] = {}
+
+    @functools.wraps(fn)
+    def call(*args: Any, **kwargs: Any):
+        try:
+            key = tuple(sorted(kwargs.items()))
+            wrapped = cache.get(key)
+        except TypeError:                      # unhashable kwarg: no caching
+            key, wrapped = None, None
+        if wrapped is None:
+            wrapped = jax.custom_vjp(functools.partial(fn, **kwargs))
+            wrapped.defvjp(functools.partial(fwd, **kwargs),
+                           functools.partial(bwd, **kwargs))
+            if key is not None:
+                cache[key] = wrapped
+        return wrapped(*args)
+    return call
+
+
 def register(op_name: str, backend: str, *, available: Callable[[], bool] = _always_true,
              supports: Callable[..., bool] = _always_true,
-             differentiable: bool = True, tunables: Sequence[str] = ()):
+             differentiable: bool = True, tunables: Sequence[str] = (),
+             vjp: Optional[Tuple[Callable, Callable]] = None,
+             bwd_tunables: Sequence[str] = ()):
     """Decorator: register ``fn`` as ``op_name``'s ``backend`` implementation.
 
     All impls of one op must share a call signature (each accepts the union
     of kwargs and ignores what it does not use) so call sites are
-    backend-oblivious.
+    backend-oblivious. A ``vjp=(fwd, bwd)`` pair makes the impl
+    differentiable: dispatch runs the :func:`custom_vjp_fn`-wrapped function,
+    so ``jax.grad`` traces ``bwd`` instead of the impl's internals.
     """
     backend = _canon(backend)
+    if vjp is not None and not differentiable:
+        raise ValueError(f"{op_name}/{backend}: a vjp pair implies "
+                         "differentiable=True")
 
     def deco(fn: Callable) -> Callable:
+        dispatch_fn = custom_vjp_fn(fn, *vjp) if vjp is not None else fn
         _op(op_name).impls[backend] = Impl(
-            backend=backend, fn=fn, available=available, supports=supports,
-            differentiable=differentiable, tunables=tuple(tunables))
+            backend=backend, fn=dispatch_fn, available=available,
+            supports=supports, differentiable=differentiable,
+            tunables=tuple(tunables), vjp=vjp,
+            bwd_tunables=tuple(bwd_tunables))
         return fn
     return deco
 
 
 def describe(op_name: str, *, shape_of: Optional[Callable] = None,
              make_inputs: Optional[Callable] = None,
-             candidates: Optional[Callable] = None) -> None:
+             candidates: Optional[Callable] = None,
+             bwd_candidates: Optional[Callable] = None) -> None:
     """Attach autotune/test metadata to an op (see :class:`Op`)."""
     op = _op(op_name)
     op.shape_of = shape_of or op.shape_of
     op.make_inputs = make_inputs or op.make_inputs
     op.candidates = candidates or op.candidates
+    op.bwd_candidates = bwd_candidates or op.bwd_candidates
 
 
 def _ensure_loaded() -> None:
@@ -261,8 +333,10 @@ def use(backend: Optional[str]):
 @contextlib.contextmanager
 def grad_safe():
     """Scope in which dispatch skips impls without a VJP (``differentiable=
-    False``). Entered by loss functions so training never tries to
-    differentiate through a Pallas kernel."""
+    False``). Entered by loss functions as a narrow per-impl guard: impls
+    registered with a ``vjp`` pair (all the stock Pallas kernels) pass
+    through and their backward kernels are traced; only the rare VJP-less
+    impl is routed to its ``xla`` fallback."""
     _tls.grad_depth = getattr(_tls, "grad_depth", 0) + 1
     try:
         yield
@@ -308,13 +382,17 @@ def dispatch(name: str, *args: Any, **kwargs: Any) -> Any:
     """
     op = get_op(name)
     impl = select(name, *args, **kwargs)
-    if impl.tunables and op.shape_of is not None:
-        entry = _tuned_entry(op, impl, args, kwargs)
-        if entry:
-            kwargs = dict(kwargs)
-            for key in impl.tunables:
-                if kwargs.get(key) is None and key in entry["params"]:
-                    kwargs[key] = entry["params"][key]
+    if op.shape_of is not None:
+        for tunables, suffix in ((impl.tunables, ""),
+                                 (impl.bwd_tunables, BWD_KEY_SUFFIX)):
+            if not tunables:
+                continue
+            entry = _tuned_entry(op, impl, args, kwargs, suffix=suffix)
+            if entry:
+                kwargs = dict(kwargs)
+                for key in tunables:
+                    if kwargs.get(key) is None and key in entry["params"]:
+                        kwargs[key] = entry["params"][key]
     return impl.fn(*args, **kwargs)
 
 
@@ -323,6 +401,13 @@ def dispatch(name: str, *args: Any, **kwargs: Any) -> Any:
 # --------------------------------------------------------------------------
 
 _TUNED: Optional[Dict[str, dict]] = None
+_DEVICE_KIND: Optional[str] = None
+
+#: cache-key op suffix for backward-pass tunables ("flash_attention+bwd|...")
+BWD_KEY_SUFFIX = "+bwd"
+#: device-kind placeholder while the backend is uninitialized; entries keyed
+#: by it are process-local only (never persisted)
+UNKNOWN_DEVICE = "unknown"
 
 
 def cache_path() -> str:
@@ -332,27 +417,44 @@ def cache_path() -> str:
 
 
 def _device_kind() -> str:
-    try:
-        return jax.devices()[0].device_kind.replace(" ", "_").lower()
-    except Exception:                                   # uninitialized backend
-        return "unknown"
+    """The device kind, resolved lazily at every lookup and memoized only
+    once real (an early failed probe must not bake ``unknown`` into keys
+    used for the rest of the process)."""
+    global _DEVICE_KIND
+    if _DEVICE_KIND is None:
+        try:
+            _DEVICE_KIND = jax.devices()[0].device_kind.replace(" ", "_").lower()
+        except Exception:                               # uninitialized backend
+            return UNKNOWN_DEVICE
+    return _DEVICE_KIND
+
+
+def _is_persistable(key: str) -> bool:
+    return not key.endswith(f"|{UNKNOWN_DEVICE}")
 
 
 def _cache_key(op_name: str, backend: str, shape: Tuple[int, ...]) -> str:
     return f"{op_name}|{backend}|{'x'.join(map(str, shape))}|{_device_kind()}"
 
 
+def _read_cache_file(path: str) -> Dict[str, dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, json.JSONDecodeError) as e:
+        warnings.warn(f"ignoring unreadable autotune cache {path}: {e}")
+        return {}
+
+
 def _tuned() -> Dict[str, dict]:
     global _TUNED
     if _TUNED is None:
-        _TUNED = {}
-        path = cache_path()
-        if os.path.exists(path):
-            try:
-                with open(path) as f:
-                    _TUNED = json.load(f)
-            except (OSError, json.JSONDecodeError) as e:
-                warnings.warn(f"ignoring unreadable autotune cache {path}: {e}")
+        # legacy unknown-device entries can never match a lazily-resolved
+        # lookup key honestly, so drop them on load
+        _TUNED = {k: v for k, v in _read_cache_file(cache_path()).items()
+                  if _is_persistable(k)}
     return _TUNED
 
 
@@ -362,7 +464,8 @@ def reload_tuned() -> None:
     _TUNED = None
 
 
-def _tuned_entry(op: Op, impl: Impl, args, kwargs) -> Optional[dict]:
+def _tuned_entry(op: Op, impl: Impl, args, kwargs,
+                 suffix: str = "") -> Optional[dict]:
     table = _tuned()
     if not table:
         return None
@@ -370,7 +473,29 @@ def _tuned_entry(op: Op, impl: Impl, args, kwargs) -> Optional[dict]:
         shape = tuple(op.shape_of(*args, **kwargs))
     except Exception:
         return None
-    return table.get(_cache_key(op.name, impl.backend, shape))
+    return table.get(_cache_key(op.name + suffix, impl.backend, shape))
+
+
+def _save_cache(path: str, fresh: Dict[str, dict]) -> None:
+    """Persist the in-memory table, merging concurrent writers' entries.
+
+    The write is read-merge-replace under a per-pid tmp file: the on-disk
+    file is re-read immediately before the atomic replace so two processes
+    tuning concurrently (the CI matrix) union their entries instead of
+    clobbering each other. Only the on-disk table and this call's ``fresh``
+    entries are written (fresh wins on conflict): a concurrent writer's
+    newer result for a key we merely *loaded* is not reverted by our stale
+    in-memory copy, and entries from earlier ``save=False`` calls stay
+    process-local. Unknown-device keys stay in memory only.
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    persistable = lambda d: {k: v for k, v in d.items() if _is_persistable(k)}
+    merged = {**persistable(_read_cache_file(path)), **persistable(fresh)}
+    _tuned().update(merged)      # adopt the merge outcome in memory too
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(merged, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
 
 
 def _time_call(fn: Callable, args, kwargs, iters: int, warmup: int) -> float:
@@ -384,11 +509,32 @@ def _time_call(fn: Callable, args, kwargs, iters: int, warmup: int) -> float:
     return best
 
 
+def _sum_leaves(out: Any) -> jax.Array:
+    return sum(jnp.sum(jnp.asarray(leaf).astype(jnp.float32))
+               for leaf in jax.tree.leaves(out))
+
+
+def grad_argnums(args: Sequence[Any]) -> Tuple[int, ...]:
+    """Positions of the floating-point array args — the argnums a grad-mode
+    timing must differentiate. Differentiating only arg 0 would let jit
+    dead-code-eliminate whole backward kernels (e.g. flash attention's dkv)
+    and rank candidates on a fraction of the real backward."""
+    return tuple(i for i, a in enumerate(args)
+                 if hasattr(a, "dtype") and jnp.issubdtype(a.dtype,
+                                                           jnp.floating))
+
+
 def autotune(op_name: str, shapes: Iterable[Sequence[int]], *,
              backends: Optional[Sequence[str]] = None, iters: int = 3,
-             warmup: int = 1, save: bool = True) -> Dict[str, dict]:
+             warmup: int = 1, save: bool = True,
+             grad: bool = False) -> Dict[str, dict]:
     """Time each registered block-size candidate of ``op_name`` over
     ``shapes`` and persist the winners.
+
+    ``grad=False`` sweeps the impl's forward ``tunables``; ``grad=True``
+    times a ``jax.grad`` through the impl instead, sweeps its
+    ``bwd_tunables`` (backward block sizes), and stores winners under the
+    separate ``<op>+bwd`` cache keys.
 
     Returns the new cache entries ``{key: {"params": ..., "us": ...}}``; the
     same entries are merged into the on-disk JSON cache (see
@@ -400,6 +546,7 @@ def autotune(op_name: str, shapes: Iterable[Sequence[int]], *,
         raise ValueError(f"op {op_name!r} has no autotune metadata "
                          "(registry.describe(make_inputs=...))")
     wanted = [_canon(b) for b in backends] if backends else op.backends()
+    key_op = op_name + (BWD_KEY_SUFFIX if grad else "")
     results: Dict[str, dict] = {}
     for shape in shapes:
         shape = tuple(int(s) for s in shape)
@@ -410,35 +557,40 @@ def autotune(op_name: str, shapes: Iterable[Sequence[int]], *,
             else shape
         for bname in wanted:
             impl = op.impls.get(bname)
-            if not _usable(impl, args, base_kw) or not impl.tunables:
+            if not _usable(impl, args, base_kw):
                 continue
-            cands = op.candidates(bname, shape) if op.candidates else [{}]
+            tunables = impl.bwd_tunables if grad else impl.tunables
+            if not tunables or (grad and not impl.differentiable):
+                continue
+            cand_fn = op.bwd_candidates if grad else op.candidates
+            cands = cand_fn(bname, shape) if cand_fn else [{}]
             best: Optional[Tuple[float, dict]] = None
             for cand in cands or [{}]:
                 kw = {**base_kw,
-                      **{k: v for k, v in cand.items() if k in impl.tunables}}
+                      **{k: v for k, v in cand.items() if k in tunables}}
                 try:
                     # time the compiled call: tunables are keyword-bound so
                     # they stay static (some feed static args of inner jits),
                     # and eager-mode Python overhead doesn't skew the ranking
-                    fn = jax.jit(functools.partial(impl.fn, **kw))
+                    target = functools.partial(impl.fn, **kw)
+                    if grad:
+                        fn = jax.jit(jax.grad(
+                            lambda *a: _sum_leaves(target(*a)),
+                            argnums=grad_argnums(args)))
+                    else:
+                        fn = jax.jit(target)
                     t = _time_call(fn, args, {}, iters, warmup)
                 except Exception:
                     continue
                 if best is None or t < best[0]:
                     best = (t, dict(cand))
             if best is not None:
-                key = _cache_key(op_name, bname, key_shape)
+                key = _cache_key(key_op, bname, key_shape)
                 entry = dict(params=best[1], us=round(best[0] * 1e6, 2))
                 _tuned()[key] = entry
                 results[key] = entry
-    if save and results:
-        path = cache_path()
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(_tuned(), f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+    if save and any(_is_persistable(k) for k in results):
+        _save_cache(cache_path(), results)
     return results
 
 

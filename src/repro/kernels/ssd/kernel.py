@@ -22,8 +22,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
-                nchunks: int):
+def _ssd_body(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, hins_ref, h_ref,
+              *, nchunks: int):
     ic = pl.program_id(1)
 
     @pl.when(ic == 0)
@@ -35,6 +35,9 @@ def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
     Bm = b_ref[0, 0].astype(jnp.float32)          # (L, N)
     Cm = c_ref[0, 0].astype(jnp.float32)          # (L, N)
     L = xdt.shape[0]
+    h_in = h_ref[...]                             # (P, N) state entering chunk
+    if hins_ref is not None:                      # residual for the backward
+        hins_ref[0, 0, :, :] = h_in
 
     cs = jnp.cumsum(a, axis=0)                    # (L, 1) inclusive
     cs_L = cs[L - 1, 0]
@@ -50,7 +53,6 @@ def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
                             preferred_element_type=jnp.float32)    # (L, P)
 
     # inter-chunk: y_t += exp(cs_t) * C_t . h_in
-    h_in = h_ref[...]                             # (P, N)
     y += jnp.exp(cs) * jax.lax.dot_general(
         Cm, h_in, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)       # (L, P)
@@ -68,20 +70,54 @@ def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
         hout_ref[0, :, :] = h_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "ngroups", "interpret"))
+def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                nchunks: int):
+    _ssd_body(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, None, h_ref,
+              nchunks=nchunks)
+
+
+def _ssd_kernel_states(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref,
+                       hins_ref, h_ref, *, nchunks: int):
+    _ssd_body(xdt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, hins_ref, h_ref,
+              nchunks=nchunks)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "ngroups", "interpret",
+                                             "return_states"))
 def ssd(xdt, a, Bm, Cm, *, chunk: int, ngroups: int = 1,
-        interpret: bool = True):
+        interpret: bool = True, return_states: bool = False):
     """Chunked SSD. xdt (Bt,H,S,P) = x*dt; a (Bt,H,S,1) = dt*A;
     Bm, Cm (Bt,G,S,N). S % chunk == 0 (ops.py pads). Returns
-    y (Bt,H,S,P) and final state (Bt*H, P, N)."""
+    y (Bt,H,S,P) and final state (Bt*H, P, N).
+
+    return_states: also return the per-chunk *incoming* states
+    (Bt*H, S/chunk, P, N) fp32 — the residual the reverse chunk-scan
+    backward kernel consumes."""
     Bt, H, S, P = xdt.shape
     N = Bm.shape[-1]
     nchunks = S // chunk
     hpg = H // ngroups                                 # heads per group
     grid = (Bt * H, nchunks)
 
-    kernel = functools.partial(_ssd_kernel, nchunks=nchunks)
-    y, h = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, 1, chunk, P),
+                     lambda bh, ic: (bh // H, bh % H, ic, 0)),
+        pl.BlockSpec((1, P, N), lambda bh, ic: (bh, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(xdt.shape, xdt.dtype),
+        jax.ShapeDtypeStruct((Bt * H, P, N), jnp.float32),
+    ]
+    if return_states:
+        kernel = functools.partial(_ssd_kernel_states, nchunks=nchunks)
+        out_specs.append(pl.BlockSpec((1, 1, P, N),
+                                      lambda bh, ic: (bh, ic, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((Bt * H, nchunks, P, N), jnp.float32))
+    else:
+        kernel = functools.partial(_ssd_kernel, nchunks=nchunks)
+
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -94,16 +130,10 @@ def ssd(xdt, a, Bm, Cm, *, chunk: int, ngroups: int = 1,
             pl.BlockSpec((1, 1, chunk, N),
                          lambda bh, ic: (bh // H, (bh % H) // hpg, ic, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, chunk, P),
-                         lambda bh, ic: (bh // H, bh % H, ic, 0)),
-            pl.BlockSpec((1, P, N), lambda bh, ic: (bh, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(xdt.shape, xdt.dtype),
-            jax.ShapeDtypeStruct((Bt * H, P, N), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
     )(xdt, a, Bm, Cm)
-    return y, h.reshape(Bt, H, P, N)
+    y, h = outs[0], outs[1].reshape(Bt, H, P, N)
+    return (y, h, outs[2]) if return_states else (y, h)

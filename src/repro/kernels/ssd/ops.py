@@ -3,14 +3,17 @@
 a = 0 -> decay 1 and xdt = 0 -> no state contribution), dispatch.
 
 Registers the ``ssd`` op: ``pallas`` is the chunked-scan kernel (zero initial
-state only — per-call ``supports`` rejects ``h0``), ``xla`` the chunked jnp
-reference. Both share the signature ``(x, dt, A, B, C, *, chunk, h0)``."""
+state only — per-call ``supports`` rejects ``h0``) with a recompute-based
+custom VJP (``backward.ssd_bwd``, reverse chunk-scan; ``chunk_bwd`` tunes the
+backward independently), ``xla`` the chunked jnp reference. Both share the
+signature ``(x, dt, A, B, C, *, chunk, h0)``."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import pad, registry
+from repro.kernels.ssd import backward as _kb
 from repro.kernels.ssd import kernel as _k
 from repro.kernels.ssd import ref as _ref
 
@@ -18,8 +21,8 @@ DEFAULT_CHUNK = 64
 
 
 def _ssd_xla(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
-             interpret=None):
-    del interpret                               # pallas-only kwarg
+             interpret=None, chunk_bwd=None):
+    del interpret, chunk_bwd                    # pallas-only kwargs
     chunk = chunk or DEFAULT_CHUNK
     S = x.shape[1]
     x, dt, B, C = (pad.pad_to_multiple(a, 1, chunk) for a in (x, dt, B, C))
@@ -27,27 +30,74 @@ def _ssd_xla(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
     return pad.unpad_dims(y, {1: S}), h
 
 
+def _kernel_operands(x, dt, A, B, C, chunk):
+    """Model layout -> padded kernel layout (xdt, a, Bm, Cm)."""
+    f32 = jnp.float32
+    xdt = (x.astype(f32) * dt[..., None].astype(f32)).transpose(0, 2, 1, 3)
+    a = (dt.astype(f32) * A[None, None, :]).transpose(0, 2, 1)[..., None]
+    Bm = B.astype(f32)[:, None]                     # (Bt, G=1, S, N)
+    Cm = C.astype(f32)[:, None]
+    return tuple(pad.pad_to_multiple(t_, 2, chunk)
+                 for t_ in (xdt, a, Bm, Cm))
+
+
 def _ssd_pallas(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
-                interpret: bool | None = None):
+                interpret: bool | None = None, chunk_bwd=None):
+    del chunk_bwd                               # backward-only tunable
     if h0 is not None:
         raise NotImplementedError("kernel path starts from zero state; "
                                   "the xla backend handles stateful resume")
     chunk = chunk or DEFAULT_CHUNK
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    Bt, S, H, P = x.shape
+    S = x.shape[1]
 
-    f32 = jnp.float32
-    xdt = (x.astype(f32) * dt[..., None].astype(f32)).transpose(0, 2, 1, 3)
-    a = (dt.astype(f32) * A[None, None, :]).transpose(0, 2, 1)[..., None]
-    Bm = B.astype(f32)[:, None]                     # (Bt, G=1, S, N)
-    Cm = C.astype(f32)[:, None]
-    xdt, a, Bm, Cm = (pad.pad_to_multiple(t_, 2, chunk)
-                      for t_ in (xdt, a, Bm, Cm))
-
+    xdt, a, Bm, Cm = _kernel_operands(x, dt, A, B, C, chunk)
     y, h = _k.ssd(xdt, a, Bm, Cm, chunk=chunk, ngroups=1, interpret=interpret)
     y = pad.unpad_dims(y.transpose(0, 2, 1, 3), {1: S}).astype(x.dtype)
     return y, h
+
+
+def _ssd_pallas_fwd(x, dt, A, B, C, **kw):
+    """custom_vjp fwd: the primal inputs are the whole residual — the
+    backward recomputes everything else (chunk states included)."""
+    return _ssd_pallas(x, dt, A, B, C, **kw), (x, dt, A, B, C)
+
+
+def _ssd_pallas_bwd(res, ct, *, chunk: int | None = None, h0=None,
+                    interpret: bool | None = None,
+                    chunk_bwd: int | None = None):
+    x, dt, A, B, C = res
+    dy, dh = ct                               # cotangents of (y, h_final)
+    del h0                                    # pallas path: always zero state
+    L = chunk_bwd or chunk or DEFAULT_CHUNK
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+
+    xdt, a, Bm, Cm = _kernel_operands(x, dt, A, B, C, L)
+    dy_k = pad.pad_to_multiple(dy.astype(f32).transpose(0, 2, 1, 3), 2, L)
+    # recompute the per-chunk incoming states with one extra forward sweep
+    _, _, hins = _k.ssd(xdt, a, Bm, Cm, chunk=L, ngroups=1,
+                        interpret=interpret, return_states=True)
+    dxdt, da, dBh, dCh = _kb.ssd_bwd(
+        xdt, a, Bm, Cm, dy_k, hins, dh.astype(f32).reshape(Bt * H, P, N),
+        chunk=L, ngroups=1, interpret=interpret)
+
+    # kernel layout -> model layout, chain through xdt = x*dt and a = dt*A
+    unpads = lambda t: pad.unpad_dims(t.transpose(0, 2, 1, 3), {1: S})
+    dxdt_m = unpads(dxdt)                               # (Bt, S, H, P)
+    da_m = unpads(da)[..., 0]                           # (Bt, S, H)
+    dt32 = dt.astype(f32)
+    dx = (dxdt_m * dt32[..., None]).astype(x.dtype)
+    ddt = (jnp.sum(dxdt_m * x.astype(f32), axis=-1)
+           + da_m * A[None, None, :]).astype(dt.dtype)
+    dA = jnp.sum(da_m * dt32, axis=(0, 1)).astype(A.dtype)
+    dB = unpads(dBh).sum(axis=2).astype(B.dtype)        # heads share B/C
+    dC = unpads(dCh).sum(axis=2).astype(C.dtype)
+    return dx, ddt, dA, dB, dC
 
 
 def ssd(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
@@ -95,8 +145,18 @@ def _candidates(backend, shape):
     return [dict(chunk=c) for c in (32, 64, 128) if c <= pad.round_up(S, 32)]
 
 
+def _bwd_candidates(backend, shape):
+    if backend != "pallas":
+        return []
+    _, S = shape[0], shape[1]
+    return [dict(chunk_bwd=c) for c in (32, 64, 128)
+            if c <= pad.round_up(S, 32)]
+
+
 registry.describe("ssd", shape_of=lambda x, *a, **kw: tuple(x.shape),
-                  make_inputs=_make_inputs, candidates=_candidates)
+                  make_inputs=_make_inputs, candidates=_candidates,
+                  bwd_candidates=_bwd_candidates)
 registry.register("ssd", "pallas", supports=_supports_zero_state,
-                  differentiable=False, tunables=("chunk",))(_ssd_pallas)
+                  tunables=("chunk",), bwd_tunables=("chunk_bwd",),
+                  vjp=(_ssd_pallas_fwd, _ssd_pallas_bwd))(_ssd_pallas)
 registry.register("ssd", "xla", tunables=("chunk",))(_ssd_xla)

@@ -15,8 +15,11 @@ This module registers the ``flash_attention`` registry op in the model's
 (B, S, H, D) layout: ``xla`` = :func:`chunked_attention`, ``pallas`` = the
 kernel in ``repro.kernels.flash_attention`` (static masks only — its
 per-call predicate rejects dynamic ``kv_valid_len``, so cached decode always
-takes the XLA path). Call sites use :func:`attention`, which defers to the
-process backend policy (see ``repro.kernels.registry``).
+takes the XLA path). The pallas impl registers the FA-2-style custom VJP
+(``kernels.flash_attention.backward``), so ``loss_fn`` gradients trace the
+pallas backward kernels rather than detouring to XLA. Call sites use
+:func:`attention`, which defers to the process backend policy (see
+``repro.kernels.registry``).
 """
 from __future__ import annotations
 
@@ -130,34 +133,65 @@ def chunked_attention(q, k, v, *, causal: bool = True,
 def _attention_xla(q, k, v, *, causal: bool = True, scale=None,
                    kv_valid_len=None, chunk: Optional[int] = None,
                    q_chunk: Optional[int] = Q_CHUNK_DEFAULT,
-                   bq=None, bk=None):
-    del bq, bk                                     # pallas-only tunables
+                   bq=None, bk=None, bq_bwd=None, bk_bwd=None):
+    del bq, bk, bq_bwd, bk_bwd                     # pallas-only tunables
     return chunked_attention(q, k, v, causal=causal,
                              chunk=chunk or KV_CHUNK_DEFAULT,
                              q_chunk=q_chunk, scale=scale,
                              kv_valid_len=kv_valid_len)
 
 
+def _bhsd(x):
+    return x.transpose(0, 2, 1, 3)                 # (B,S,H,D) <-> (B,H,S,D)
+
+
 def _attention_pallas(q, k, v, *, causal: bool = True, scale=None,
                       kv_valid_len=None, chunk: Optional[int] = None,
-                      q_chunk: Optional[int] = None, bq=None, bk=None):
+                      q_chunk: Optional[int] = None, bq=None, bk=None,
+                      bq_bwd=None, bk_bwd=None):
     del kv_valid_len, chunk, q_chunk               # xla-only knobs
+    del bq_bwd, bk_bwd                             # backward-only tunables
     o = _fa_ops.flash_attention(
-        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-        v.transpose(0, 2, 1, 3), causal=causal, scale=scale, bq=bq, bk=bk)
-    return o.transpose(0, 2, 1, 3)
+        _bhsd(q), _bhsd(k), _bhsd(v), causal=causal, scale=scale, bq=bq,
+        bk=bk)
+    return _bhsd(o)
+
+
+def _attention_pallas_fwd(q, k, v, *, causal: bool = True, scale=None,
+                          kv_valid_len=None, chunk=None, q_chunk=None,
+                          bq=None, bk=None, bq_bwd=None, bk_bwd=None):
+    del kv_valid_len, chunk, q_chunk, bq_bwd, bk_bwd
+    o, res = _fa_ops.flash_attention_fwd(
+        _bhsd(q), _bhsd(k), _bhsd(v), causal=causal, scale=scale, bq=bq,
+        bk=bk)
+    return _bhsd(o), res                           # residuals in kernel layout
+
+
+def _attention_pallas_bwd(res, do, *, causal: bool = True, scale=None,
+                          kv_valid_len=None, chunk=None, q_chunk=None,
+                          bq=None, bk=None, bq_bwd=None, bk_bwd=None):
+    del kv_valid_len, chunk, q_chunk
+    dq, dk, dv = _fa_ops.flash_attention_bwd(
+        res, _bhsd(do), causal=causal, scale=scale, bq=bq, bk=bk,
+        bq_bwd=bq_bwd, bk_bwd=bk_bwd)
+    return _bhsd(dq), _bhsd(dk), _bhsd(dv)
 
 
 def attention(q, k, v, *, causal: bool = True, scale=None, kv_valid_len=None,
               chunk: Optional[int] = None,
-              q_chunk: Optional[int] = Q_CHUNK_DEFAULT, bq=None, bk=None):
-    """Backend-dispatched GQA attention, (B,S,H,D) layout.
+              q_chunk: Optional[int] = Q_CHUNK_DEFAULT, bq=None, bk=None,
+              bq_bwd=None, bk_bwd=None):
+    """Backend-dispatched GQA attention, (B,S,H,D) layout. Differentiable
+    under every backend (the pallas impl carries an FA-2-style custom VJP).
 
     The implementation is chosen by the registry policy; block sizes left as
-    ``None`` are filled from the autotune cache (then per-impl defaults)."""
+    ``None`` are filled from the autotune cache (then per-impl defaults) —
+    ``bq``/``bk`` for the forward, ``bq_bwd``/``bk_bwd`` for the backward
+    kernels."""
     return registry.dispatch(
         "flash_attention", q, k, v, causal=causal, scale=scale,
-        kv_valid_len=kv_valid_len, chunk=chunk, q_chunk=q_chunk, bq=bq, bk=bk)
+        kv_valid_len=kv_valid_len, chunk=chunk, q_chunk=q_chunk, bq=bq, bk=bk,
+        bq_bwd=bq_bwd, bk_bwd=bk_bwd)
 
 
 def pallas_attention(q, k, v, *, causal: bool = True, scale=None,
@@ -203,14 +237,24 @@ def _fa_candidates(backend, shape):
     return [dict(chunk=c) for c in (128, 256, 1024)]
 
 
+def _fa_bwd_candidates(backend, shape):
+    if backend != "pallas":
+        return []
+    return [dict(bq_bwd=bq, bk_bwd=bk) for bq in (32, 128, 512)
+            for bk in (32, 128, 512)]
+
+
 registry.describe(
     "flash_attention",
     shape_of=lambda q, k, v, **kw: (q.shape[0], q.shape[1], q.shape[2],
                                     q.shape[3], k.shape[1], k.shape[2]),
-    make_inputs=_fa_make_inputs, candidates=_fa_candidates)
+    make_inputs=_fa_make_inputs, candidates=_fa_candidates,
+    bwd_candidates=_fa_bwd_candidates)
 registry.register("flash_attention", "xla",
                   tunables=("chunk",))(_attention_xla)
 registry.register(
-    "flash_attention", "pallas", tunables=("bq", "bk"), differentiable=False,
+    "flash_attention", "pallas", tunables=("bq", "bk"),
+    bwd_tunables=("bq_bwd", "bk_bwd"),
+    vjp=(_attention_pallas_fwd, _attention_pallas_bwd),
     supports=lambda q, k, v, **kw: kw.get("kv_valid_len") is None,
 )(_attention_pallas)

@@ -233,9 +233,11 @@ def loss_fn(params, cfg, batch, *, constrain=_no_constrain,
             aux_weight: float = 0.01, vocab_chunks: int = 1):
     """Next-token cross entropy (+ MoE load-balance aux).
 
-    Runs the forward under ``registry.grad_safe()``: backends whose kernels
-    lack a custom VJP (pallas, today) are skipped for the differentiated
-    path, whatever the policy says."""
+    Runs the forward under ``registry.grad_safe()``, now a narrow per-impl
+    guard: the stock Pallas kernels register custom VJPs, so under
+    ``REPRO_BACKEND=pallas`` differentiation traces their backward kernels
+    (FA-2-style flash attention, reverse chunk-scan SSD); only an impl
+    without a VJP is routed to its XLA fallback."""
     with registry.use(_legacy(use_pallas, "loss_fn")), registry.grad_safe():
         logits, aux = _forward(params, cfg, batch, constrain=constrain,
                                remat=remat)

@@ -14,7 +14,7 @@ Five modules, one contract:
                   retire -> stats.
 """
 from repro.serve.api import (Request, Response, EngineStats, FINISH_EOS,
-                             FINISH_LENGTH, FINISH_SHED)
+                             FINISH_ERROR, FINISH_LENGTH, FINISH_SHED)
 from repro.serve.cache import CachePool, SlotError
 from repro.serve.scheduler import Scheduler
 from repro.serve.decode import (DecodeState, init_decode_state,
@@ -23,7 +23,7 @@ from repro.serve.engine import Engine
 
 __all__ = [
     "Request", "Response", "EngineStats",
-    "FINISH_EOS", "FINISH_LENGTH", "FINISH_SHED",
+    "FINISH_EOS", "FINISH_ERROR", "FINISH_LENGTH", "FINISH_SHED",
     "CachePool", "SlotError", "Scheduler",
     "DecodeState", "init_decode_state", "make_decode_block",
     "Engine",

@@ -11,6 +11,8 @@ from typing import List, Optional, Sequence
 FINISH_EOS = "eos"          # model emitted the eos token
 FINISH_LENGTH = "length"    # hit max_new_tokens (or the cache ran out)
 FINISH_SHED = "shed"        # rejected by overload admission, never decoded
+FINISH_ERROR = "error"      # invalid request (e.g. prompt exceeds engine
+                            # bounds), rejected at admission without a slot
 
 
 @dataclasses.dataclass
@@ -32,7 +34,8 @@ class Request:
 class Response:
     id: str
     tokens: List[int]                        # generated ids (prompt excluded)
-    finish_reason: str                       # FINISH_EOS | FINISH_LENGTH | FINISH_SHED
+    finish_reason: str                       # FINISH_EOS | FINISH_LENGTH
+                                             # | FINISH_SHED | FINISH_ERROR
     prompt_len: int = 0
     queue_wait_s: float = 0.0                # submit -> slot assignment
     latency_s: float = 0.0                   # submit -> retirement
@@ -49,6 +52,7 @@ class EngineStats:
     admitted: int = 0
     retired: int = 0
     shed: int = 0
+    rejected: int = 0                        # invalid at admission (error)
     defrags: int = 0
     occupancy_sum: float = 0.0               # live-slot fraction, per sync
 

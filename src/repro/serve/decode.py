@@ -81,8 +81,15 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
         state = state._replace(cache=jax.tree.map(
             lambda x, t: x.astype(t.dtype), state.cache, target))
 
+        # a slot whose prompt overflows the prompt buffer or the cache can
+        # never satisfy ``lengths >= prompt_len - 1`` and would spin through
+        # k-blocks forever without emitting; admission rejects these, and
+        # this guard retires a stray one at the next sync instead
+        unservable = prompt_len > jnp.minimum(P, max_len - 1)
+
         def body(st: DecodeState, _):
-            live = active & ~st.done
+            done0 = st.done | (active & unservable)
+            live = active & ~done0
             in_prefill = st.lengths < prompt_len
             idx = jnp.clip(st.lengths, 0, P - 1)
             ptok = jnp.take_along_axis(prompts, idx[:, None], axis=1)[:, 0]
@@ -94,7 +101,7 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
             # generated token; pure-prefill steps emit nothing
             emit = live & (st.lengths >= prompt_len - 1)
             n_out = st.n_out + emit.astype(jnp.int32)
-            done = st.done | (emit & (n_out >= max_new)) \
+            done = done0 | (emit & (n_out >= max_new)) \
                 | (live & (st.lengths >= max_len - 1))
             if eos_id is not None:
                 done = done | (emit & (nxt == eos_id))

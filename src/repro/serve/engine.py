@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.models import init_cache
 from repro.models.transformer import prefill_audio_cache
 from repro.serve.api import (Request, Response, EngineStats, FINISH_EOS,
-                             FINISH_LENGTH, FINISH_SHED)
+                             FINISH_ERROR, FINISH_LENGTH, FINISH_SHED)
 from repro.serve.cache import CachePool
 from repro.serve.decode import init_decode_state, make_decode_block
 from repro.serve.scheduler import Scheduler
@@ -80,13 +80,15 @@ class Engine:
 
     # -------------------------------------------------------------- ingest
     def submit(self, req: Request) -> None:
+        """Enqueue a request. Malformed requests (empty prompt, missing
+        enc_embeds) raise immediately; an over-long prompt is accepted here
+        but rejected with a ``finish_reason="error"`` Response at admission
+        — the same guard that catches requests submitted straight to the
+        scheduler, which previously entered a slot they could never finish
+        (the prompt can never satisfy ``lengths >= prompt_len - 1``)."""
         n = len(req.prompt)
         if n < 1:
             raise ValueError(f"request {req.id}: empty prompt")
-        if n > self.max_prompt or n >= self.max_len:
-            raise ValueError(
-                f"request {req.id}: prompt length {n} exceeds engine bounds "
-                f"(max_prompt={self.max_prompt}, max_len={self.max_len})")
         if self.cfg.family == "audio":
             want = (self.pool.enc_len, self.cfg.d_model)
             got = np.shape(req.enc_embeds) if req.enc_embeds is not None \
@@ -109,6 +111,18 @@ class Engine:
         st = self.state
         slots = []
         for r in admit:
+            n = len(r.prompt)
+            if n > self.max_prompt or n >= self.max_len:
+                # an over-long prompt can never reach its first emit
+                # (lengths >= prompt_len - 1 is unsatisfiable within the
+                # prompt buffer / cache depth): reject without a slot
+                # instead of spinning in the k-block forever
+                wait = now - r.arrival_s
+                out.append(Response(
+                    id=r.id, tokens=[], finish_reason=FINISH_ERROR,
+                    prompt_len=n, queue_wait_s=wait, latency_s=wait))
+                self.stats.rejected += 1
+                continue
             slot = self.pool.allocate(r.id)
             slots.append(slot)
             if self.cfg.family == "audio":
@@ -118,7 +132,6 @@ class Engine:
             else:
                 cache = self.pool.zero_slot(st.cache, slot)
             st = st._replace(cache=cache)
-            n = len(r.prompt)
             self._prompt_buf[slot, :] = 0
             self._prompt_buf[slot, :n] = np.asarray(r.prompt, np.int32)
             self._prompt_len[slot] = n

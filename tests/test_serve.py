@@ -21,7 +21,7 @@ from repro.dist import DeadlineGate
 from repro.launch.steps import make_serve_step
 from repro.models import init_params, init_cache, decode_step
 from repro.serve import (Engine, Request, CachePool, Scheduler, SlotError,
-                         FINISH_LENGTH, FINISH_SHED)
+                         FINISH_ERROR, FINISH_LENGTH, FINISH_SHED)
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -228,10 +228,51 @@ def test_engine_whisper_encdec():
 
 
 def test_engine_rejects_oversized_prompt():
+    """An over-long prompt gets an error Response at admission (it could
+    never satisfy ``lengths >= prompt_len - 1`` and used to spin in the
+    k-block without emitting); valid neighbours are unaffected."""
     params = init_params(CFG_TINY, jax.random.PRNGKey(0))
     eng = Engine(params, CFG_TINY, num_slots=2, max_len=16, k=2,
                  max_prompt=4)
     with pytest.raises(ValueError):
-        eng.submit(Request(id="x", prompt=[1] * 5))
-    with pytest.raises(ValueError):
-        eng.submit(Request(id="y", prompt=[]))
+        eng.submit(Request(id="y", prompt=[]))    # malformed: still raises
+    resps = eng.run([Request(id="long", prompt=[1] * 5, max_new_tokens=2),
+                     Request(id="deep", prompt=[1] * 16, max_new_tokens=2),
+                     Request(id="ok", prompt=[1, 2], max_new_tokens=2)])
+    by_id = {r.id: r for r in resps}
+    assert by_id["long"].finish_reason == FINISH_ERROR
+    assert by_id["deep"].finish_reason == FINISH_ERROR   # >= max_len
+    assert by_id["long"].tokens == [] and by_id["deep"].tokens == []
+    assert by_id["ok"].finish_reason == FINISH_LENGTH
+    assert len(by_id["ok"].tokens) == 2
+    assert eng.stats.rejected == 2 and eng.pool.live_count == 0
+
+
+def test_engine_rejects_scheduler_bypass_prompt():
+    """Requests pushed straight into the scheduler (bypassing
+    ``Engine.submit`` validation) hit the same admission guard."""
+    params = init_params(CFG_TINY, jax.random.PRNGKey(0))
+    eng = Engine(params, CFG_TINY, num_slots=2, max_len=16, k=2,
+                 max_prompt=4)
+    eng.scheduler.submit(Request(id="sneak", prompt=[1] * 30))
+    resps = eng.run()
+    assert [r.finish_reason for r in resps] == [FINISH_ERROR]
+    assert eng.stats.rejected == 1 and eng.stats.admitted == 0
+
+
+def test_decode_block_retires_unservable_prompt():
+    """Defense in depth: a prompt_len beyond the prompt buffer or cache that
+    somehow reaches the block is marked done at the first sync instead of
+    spinning forever without emitting."""
+    from repro.serve.decode import init_decode_state, make_decode_block
+    params = init_params(CFG_TINY, jax.random.PRNGKey(0))
+    block = make_decode_block(CFG_TINY, None, k=2, max_len=8)
+    state = init_decode_state(init_cache(CFG_TINY, 2, 8), 2)
+    prompts = jnp.zeros((2, 4), jnp.int32)
+    prompt_len = jnp.asarray([30, 2], jnp.int32)   # slot 0 can never emit
+    max_new = jnp.asarray([4, 4], jnp.int32)
+    active = jnp.asarray([True, True])
+    state, toks, emitted = block(params, state, prompts, prompt_len,
+                                 max_new, active)
+    assert bool(state.done[0]) and not np.asarray(emitted)[:, 0].any()
+    assert not bool(state.done[1])                 # healthy slot unaffected
