@@ -1,5 +1,6 @@
 """Serving benchmark: steady-state decode throughput of the continuous-
-batching engine as a function of k (decode steps per host sync).
+batching engine as a function of k (decode steps per host sync), greedy vs
+sampled.
 
 Saturated-decode methodology: exactly ``slots`` requests with length-1
 prompts and a common token budget, so every slot decodes in lockstep for the
@@ -8,9 +9,17 @@ the true decode-step count. One untimed drain compiles the fused block; the
 timed drain then measures per-step wall time. The k=1 row IS the classic
 one-sync-per-token schedule, so ms/step falling with k is the paper's
 latency-by-k claim measured on the serve path.
+
+Sampled rows rerun the same sweep with temperature/top-p sampling attached
+to every request. The engine's sync counter is the instrumentation for the
+PR's core claim, asserted here on every pair of runs: sampling draws all k
+tokens inside the fused block, so the sampled run makes EXACTLY as many host
+syncs as the greedy run — the ``mode=sampled`` ms/step rows price the
+in-scan sampling math (sort + gumbel per step), not extra round trips.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -19,16 +28,35 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_arch, smoke_config
 from repro.models import init_params
-from repro.serve import Engine, Request
+from repro.serve import Engine, Request, SamplingParams
 
 ARCH = "internlm2-1.8b"
 NEW_TOKENS = 64
+SAMPLED = SamplingParams(temperature=0.8, top_p=0.9)
 
 
-def _requests(cfg, n, seed=0):
+def _requests(cfg, n, seed=0, sampling=None):
     rng = np.random.RandomState(seed)
+    sp = lambda i: None if sampling is None \
+        else dataclasses.replace(sampling, seed=i)
     return [Request(id=f"r{i}", prompt=[int(rng.randint(cfg.vocab))],
-                    max_new_tokens=NEW_TOKENS) for i in range(n)]
+                    max_new_tokens=NEW_TOKENS, sampling=sp(i))
+            for i in range(n)]
+
+
+def _timed_drain(cfg, params, slots, k, sampling):
+    eng = Engine(params, cfg, num_slots=slots, max_len=NEW_TOKENS + 8,
+                 k=k, max_prompt=4)
+    eng.run(_requests(cfg, slots, sampling=sampling))  # untimed: jit compile
+    base_steps, base_syncs = eng.stats.steps, eng.stats.syncs
+    reqs = _requests(cfg, slots, seed=1, sampling=sampling)
+    t0 = time.perf_counter()
+    out = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    steps = eng.stats.steps - base_steps
+    syncs = eng.stats.syncs - base_syncs
+    toks = sum(len(r.tokens) for r in out)
+    return dt, steps, syncs, toks
 
 
 def run():
@@ -36,18 +64,22 @@ def run():
     params = init_params(cfg, jax.random.PRNGKey(0))
     for slots in (4, 16):
         for k in (1, 4, 16):
-            eng = Engine(params, cfg, num_slots=slots, max_len=NEW_TOKENS + 8,
-                         k=k, max_prompt=4)
-            eng.run(_requests(cfg, slots))            # untimed: jit compile
-            base = eng.stats.steps
-            reqs = _requests(cfg, slots, seed=1)
-            t0 = time.perf_counter()
-            out = eng.run(reqs)
-            dt = time.perf_counter() - t0
-            steps = eng.stats.steps - base
-            toks = sum(len(r.tokens) for r in out)
+            dt, steps, syncs, toks = _timed_drain(cfg, params, slots, k, None)
             emit(f"serve/{cfg.name}/k={k},slots={slots}", dt / steps * 1e6,
                  f"tok_per_s={toks / dt:.0f};ms_per_step={dt / steps * 1e3:.3f}")
+            sdt, ssteps, ssyncs, stoks = _timed_drain(cfg, params, slots, k,
+                                                      SAMPLED)
+            # the CA-k invariant under sampling: one host sync per k steps,
+            # zero extra syncs relative to the greedy schedule
+            assert ssteps == ssyncs * k, \
+                f"k={k}: steps {ssteps} != syncs {ssyncs} * k"
+            assert ssyncs == syncs, \
+                f"k={k}: sampling changed the sync count " \
+                f"({ssyncs} vs greedy {syncs})"
+            emit(f"serve/{cfg.name}/k={k},slots={slots},mode=sampled",
+                 sdt / ssteps * 1e6,
+                 f"tok_per_s={stoks / sdt:.0f};"
+                 f"ms_per_step={sdt / ssteps * 1e3:.3f};syncs={ssyncs}")
 
 
 if __name__ == "__main__":

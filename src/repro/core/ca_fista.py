@@ -10,12 +10,10 @@ same ``fista_update`` is applied to the same (G_j, R_j) sequence; only the
 *schedule* of the collective changes. tests/test_core.py asserts trajectories
 match to the last ulp, under every registry backend (the policy is resolved
 once per call and pinned for the whole trace — see ``core.fista``).
-``use_kernel``/``backend`` are deprecated per-call overrides.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,29 +39,18 @@ def validate_ca_config(cfg: SolverConfig, solver: str) -> None:
 
 
 def ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-              w0=None, collect_history: bool = False,
-              use_kernel: Optional[bool] = None,
-              backend: Optional[str] = None):
-    """k-step SFISTA. Returns w_T (and optionally the (T, d) iterate history).
-
-    Deprecated kwargs keep their historical per-op scope: ``use_kernel``
-    pins only the prox update, ``backend`` only the Gram computation;
-    everything else follows the ambient registry policy."""
+              w0=None, collect_history: bool = False):
+    """k-step SFISTA. Returns w_T (and optionally the (T, d) iterate
+    history). Kernels follow the registry policy, resolved once per call."""
     validate_ca_config(cfg, "ca_sfista")
-    gram = registry.legacy_backend(backend=backend, owner="ca_sfista")
-    prox = registry.legacy_backend(use_kernel, owner="ca_sfista")
     resolved = registry.resolved_backend()
     with registry.use(resolved):
-        return _ca_sfista(problem, cfg, key, w0, collect_history, resolved,
-                          gram, prox)
+        return _ca_sfista(problem, cfg, key, w0, collect_history, resolved)
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
-                                   "gram_backend", "prox_backend"))
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
 def _ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-               w0, collect_history: bool, backend: str,
-               gram_backend: Optional[str] = None,
-               prox_backend: Optional[str] = None):
+               w0, collect_history: bool, backend: str):
     d, n = problem.X.shape
     m = max(int(cfg.b * n), 1)
     t = _resolve_step(problem, cfg)
@@ -74,13 +61,11 @@ def _ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
 
     def outer(state, idx_block):
         # Paper Alg. III line 6-7: k Gram blocks, one (conceptual) broadcast.
-        with registry.use(gram_backend):
-            G, R = gram_blocks(problem.X, problem.y, idx_block)
+        G, R = gram_blocks(problem.X, problem.y, idx_block)
 
         def inner(st, gr):
             Gj, Rj = gr
-            with registry.use(prox_backend):
-                new = fista_update(Gj, Rj, st, t, problem.lam)
+            new = fista_update(Gj, Rj, st, t, problem.lam)
             return new, (new.w if collect_history else None)
 
         state, hist = jax.lax.scan(inner, state, (G, R))

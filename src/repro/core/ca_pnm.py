@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,29 +16,19 @@ from repro.kernels import registry
 
 
 def ca_spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-            w0=None, collect_history: bool = False,
-            use_kernel: Optional[bool] = None,
-            backend: Optional[str] = None):
+            w0=None, collect_history: bool = False):
     """k-step SPNM: k Gram blocks per collective; each block drives a
     Q-iteration inner ISTA solve executed redundantly with no communication.
-    Kernels follow the registry policy; deprecated ``use_kernel`` pins only
-    the inner prox solve and ``backend`` only the Gram computation (their
-    historical scopes)."""
+    Kernels follow the registry policy, resolved once per call."""
     validate_ca_config(cfg, "ca_spnm")
-    gram = registry.legacy_backend(backend=backend, owner="ca_spnm")
-    prox = registry.legacy_backend(use_kernel, owner="ca_spnm")
     resolved = registry.resolved_backend()
     with registry.use(resolved):
-        return _ca_spnm(problem, cfg, key, w0, collect_history, resolved,
-                        gram, prox)
+        return _ca_spnm(problem, cfg, key, w0, collect_history, resolved)
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
-                                   "gram_backend", "prox_backend"))
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
 def _ca_spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-             w0, collect_history: bool, backend: str,
-             gram_backend: Optional[str] = None,
-             prox_backend: Optional[str] = None):
+             w0, collect_history: bool, backend: str):
     d, n = problem.X.shape
     m = max(int(cfg.b * n), 1)
     t = _resolve_step(problem, cfg)
@@ -48,13 +37,11 @@ def _ca_spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
     idx = idx.reshape(cfg.T // cfg.k, cfg.k, m)
 
     def outer(state, idx_block):
-        with registry.use(gram_backend):
-            G, R = gram_blocks(problem.X, problem.y, idx_block)
+        G, R = gram_blocks(problem.X, problem.y, idx_block)
 
         def inner(st, gr):
             Gj, Rj = gr
-            with registry.use(prox_backend):
-                new = pnm_update(Gj, Rj, st, t, problem.lam, cfg.Q)
+            new = pnm_update(Gj, Rj, st, t, problem.lam, cfg.Q)
             return new, (new.w if collect_history else None)
 
         state, hist = jax.lax.scan(inner, state, (G, R))

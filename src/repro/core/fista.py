@@ -5,13 +5,11 @@ Backend selection: the public solver resolves the kernel-registry policy
 ONCE at call time, pins it for the trace (``with registry.use(backend)``) and
 passes the resolved name into the jitted body as a static argument — so the
 jit cache is keyed by backend and a policy change re-traces instead of
-silently reusing a stale executable. ``use_kernel`` is a deprecated per-call
-override (True -> pallas, False -> xla).
+silently reusing a stale executable.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,27 +29,21 @@ def _resolve_step(problem: LassoProblem, cfg: SolverConfig):
 
 
 def sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-           w0=None, collect_history: bool = False,
-           use_kernel: Optional[bool] = None):
+           w0=None, collect_history: bool = False):
     """Stochastic FISTA: T iterations, one sampled-Gram + update per iteration.
 
     In the distributed setting each iteration all-reduces (G_j, R_j) —
     the communication bottleneck the CA variant removes (see ca_fista.py).
     Returns w_T, or (w_T, (k, d) iterate history) when collect_history.
     """
-    # Deprecated use_kernel pins ONLY the prox op (its historical scope);
-    # everything else follows the ambient policy.
-    prox = registry.legacy_backend(use_kernel, owner="sfista")
     backend = registry.resolved_backend()
     with registry.use(backend):
-        return _sfista(problem, cfg, key, w0, collect_history, backend, prox)
+        return _sfista(problem, cfg, key, w0, collect_history, backend)
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
-                                   "prox_backend"))
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
 def _sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-            w0, collect_history: bool, backend: str,
-            prox_backend: Optional[str] = None):
+            w0, collect_history: bool, backend: str):
     # ``backend`` keys the jit cache; dispatch resolves it from the policy
     # the public wrapper pinned for this trace.
     d, n = problem.X.shape
@@ -62,8 +54,7 @@ def _sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
 
     def step(state, idx_j):
         G, R = sampled_gram(problem.X, problem.y, idx_j)
-        with registry.use(prox_backend):
-            new = fista_update(G, R, state, t, problem.lam)
+        new = fista_update(G, R, state, t, problem.lam)
         return new, (new.w if collect_history else None)
 
     state, hist = jax.lax.scan(step, init_state(w0), idx)

@@ -9,13 +9,11 @@ iterations can be computed (and all-reduced) before any of the k updates run.
 The rank-m update dispatches through the kernel registry (op ``gram``):
 ``REPRO_BACKEND=pallas`` / ``with registry.use("pallas")`` routes it to the
 TPU Pallas kernel in ``repro.kernels.gram`` (interpret-validated on CPU);
-the default policy resolves to the XLA path. The ``backend=`` kwarg is a
-deprecated per-call override.
+the default policy resolves to the XLA path.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,30 +22,27 @@ from repro.core.sampling import sample_columns
 from repro.kernels import registry
 
 
-def sampled_gram(X: jax.Array, y: jax.Array, idx: jax.Array,
-                 m_norm=None, backend: Optional[str] = None):
+def sampled_gram(X: jax.Array, y: jax.Array, idx: jax.Array, m_norm=None):
     """One (G_j, R_j) pair from one index draw.
 
     m_norm: normalization constant; defaults to the local draw size m. The
     distributed solvers pass the *global* sample count so that psum of local
     Grams equals the Gram of the union of the samples.
     """
-    forced = registry.legacy_backend(backend=backend, owner="sampled_gram")
     Xs, ys = sample_columns(X, y, idx)
     m = idx.shape[0] if m_norm is None else m_norm
     inv_m = 1.0 / m
-    with registry.use(forced):
-        G = registry.dispatch("gram", Xs) * inv_m
+    G = registry.dispatch("gram", Xs) * inv_m
     R = (Xs @ ys) * inv_m
     return G, R
 
 
 def gram_blocks(X: jax.Array, y: jax.Array, idx_batch: jax.Array,
-                m_norm=None, backend: Optional[str] = None):
+                m_norm=None):
     """k independent Gram blocks at once: G (k, d, d), R (k, d).
 
     This is the paper's line 6 of Algorithm III — the k-step unrolled Gram
     computation whose single all-reduce replaces k per-iteration all-reduces.
     """
-    fn = partial(sampled_gram, m_norm=m_norm, backend=backend)
+    fn = partial(sampled_gram, m_norm=m_norm)
     return jax.vmap(lambda idx: fn(X, y, idx))(idx_batch)

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,23 +15,18 @@ from repro.kernels import registry
 
 
 def spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-         w0=None, collect_history: bool = False,
-         use_kernel: Optional[bool] = None):
+         w0=None, collect_history: bool = False):
     """Stochastic proximal Newton: per iteration, sample a Gram block H_j and
     solve the quadratic subproblem with Q inner ISTA steps (warm-started).
-    Kernels follow the registry policy; deprecated ``use_kernel`` pins only
-    the inner prox solve (its historical scope)."""
-    prox = registry.legacy_backend(use_kernel, owner="spnm")
+    Kernels follow the registry policy, resolved once per call."""
     backend = registry.resolved_backend()
     with registry.use(backend):
-        return _spnm(problem, cfg, key, w0, collect_history, backend, prox)
+        return _spnm(problem, cfg, key, w0, collect_history, backend)
 
 
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend",
-                                   "prox_backend"))
+@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
 def _spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-          w0, collect_history: bool, backend: str,
-          prox_backend: Optional[str] = None):
+          w0, collect_history: bool, backend: str):
     d, n = problem.X.shape
     m = max(int(cfg.b * n), 1)
     t = _resolve_step(problem, cfg)
@@ -41,8 +35,7 @@ def _spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
 
     def step(state, idx_j):
         G, R = sampled_gram(problem.X, problem.y, idx_j)
-        with registry.use(prox_backend):
-            new = pnm_update(G, R, state, t, problem.lam, cfg.Q)
+        new = pnm_update(G, R, state, t, problem.lam, cfg.Q)
         return new, (new.w if collect_history else None)
 
     state, hist = jax.lax.scan(step, init_state(w0), idx)

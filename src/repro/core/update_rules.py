@@ -7,8 +7,7 @@ algorithm (paper §IV-A), a property asserted bitwise in tests/test_core.py.
 The prox step dispatches through the kernel registry (ops ``prox_step`` /
 ``prox_loop``): the same update runs as fused Pallas kernels or as the XLA
 path depending on the process backend policy; CA-vs-classical parity holds
-under either because both solvers resolve the same policy. ``use_kernel`` is
-a deprecated per-call override.
+under either because both solvers resolve the same policy.
 
 Note on gradient evaluation point: the paper's Algorithm I/III pseudocode is
 ambiguous (it writes grad at w_{j-1} but applies the step at v_j). We follow
@@ -17,7 +16,7 @@ extrapolated point v_j — the Gram linearity grad = G v - R makes this free.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +36,7 @@ def init_state(w0: jax.Array) -> IterState:
 
 
 def fista_update(G: jax.Array, R: jax.Array, state: IterState,
-                 t, lam, use_kernel: Optional[bool] = None) -> IterState:
+                 t, lam) -> IterState:
     """One FISTA step with sampled-Gram gradient:  (paper Alg. III lines 9-13)
 
         v   = w + (j-2)/j * (w - w_prev)
@@ -45,14 +44,12 @@ def fista_update(G: jax.Array, R: jax.Array, state: IterState,
     """
     mom = fista_momentum(state.j)
     v = state.w + mom * (state.w - state.w_prev)
-    with registry.use(registry.legacy_backend(use_kernel,
-                                              owner="fista_update")):
-        w_new = registry.dispatch("prox_step", G, R, v, t, lam)
+    w_new = registry.dispatch("prox_step", G, R, v, t, lam)
     return IterState(w_prev=state.w, w=w_new, j=state.j + 1)
 
 
 def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
-               t, lam, Q: int, use_kernel: Optional[bool] = None) -> IterState:
+               t, lam, Q: int) -> IterState:
     """One proximal-Newton step (paper Alg. IV lines 9-17).
 
     The quadratic subproblem
@@ -60,11 +57,10 @@ def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
     with H = G_j and grad = G_j w - R_j, has subproblem gradient
     grad + H(z - w) = G z - R, so Q inner ISTA iterations are
         z <- S_{lam*t}( z - t (G z - R) ),   z_0 = w   (warm start).
+
+    Q rides as a kwarg: the custom-VJP wiring binds kwargs statically, so
+    the fused pallas loop stays differentiable (a positional Q would become
+    a traced primal and break reverse-mode through fori_loop).
     """
-    with registry.use(registry.legacy_backend(use_kernel,
-                                              owner="pnm_update")):
-        # Q rides as a kwarg: the custom-VJP wiring binds kwargs statically,
-        # so the fused pallas loop stays differentiable (a positional Q would
-        # become a traced primal and break reverse-mode through fori_loop)
-        z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q=Q)
+    z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q=Q)
     return IterState(w_prev=state.w, w=z, j=state.j + 1)

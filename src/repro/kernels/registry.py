@@ -592,30 +592,3 @@ def autotune(op_name: str, shapes: Iterable[Sequence[int]], *,
     if save and any(_is_persistable(k) for k in results):
         _save_cache(cache_path(), results)
     return results
-
-
-# --------------------------------------------------------------------------
-# deprecation shims
-# --------------------------------------------------------------------------
-
-def warn_deprecated(what: str, instead: str) -> None:
-    warnings.warn(f"{what} is deprecated and will be removed next release; "
-                  f"{instead}", DeprecationWarning, stacklevel=3)
-
-
-def legacy_backend(flag: Optional[bool] = None, backend: Optional[str] = None,
-                   *, owner: str, flag_name: str = "use_kernel") -> Optional[str]:
-    """Map the deprecated per-call ``use_kernel``/``use_pallas``/``backend``
-    kwargs onto a backend name (``None`` when neither was passed, so shims
-    can hand the result straight to :func:`use`)."""
-    if backend is not None:
-        warn_deprecated(f"{owner}(backend=...)",
-                        "select backends via repro.kernels.registry "
-                        "(REPRO_BACKEND / registry.use)")
-        return _canon(backend)
-    if flag is not None:
-        warn_deprecated(f"{owner}({flag_name}=...)",
-                        "select backends via repro.kernels.registry "
-                        "(REPRO_BACKEND / registry.use)")
-        return "pallas" if flag else "xla"
-    return None

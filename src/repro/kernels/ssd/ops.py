@@ -101,15 +101,13 @@ def _ssd_pallas_bwd(res, ct, *, chunk: int | None = None, h0=None,
 
 
 def ssd(x, dt, A, B, C, *, chunk: int | None = None, h0=None,
-        interpret: bool | None = None, use_kernel: bool | None = None):
+        interpret: bool | None = None):
     """Mamba-2 SSD. x (Bt,S,H,P); dt (Bt,S,H); A (H,); B,C (Bt,S,N).
     Returns y (Bt,S,H,P), h_final (Bt,H,P,N).
 
-    Backend selection follows the registry policy; ``use_kernel`` is a
-    deprecated override (True -> pallas, False -> xla)."""
-    with registry.use(registry.legacy_backend(use_kernel, owner="ssd")):
-        return registry.dispatch("ssd", x, dt, A, B, C, chunk=chunk, h0=h0,
-                                 interpret=interpret)
+    Backend selection follows the registry policy."""
+    return registry.dispatch("ssd", x, dt, A, B, C, chunk=chunk, h0=h0,
+                             interpret=interpret)
 
 
 def ssd_decode_step(x_t, dt_t, A, B_t, C_t, h):

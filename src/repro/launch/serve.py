@@ -10,10 +10,17 @@ Engine mode drains a synthetic request stream through ``repro.serve.Engine``
 host round-trip per token. Both report compile time and steady-state
 throughput separately — jit compile used to leak into the classic path's
 per-step number.
+
+Sampling: ``--temperature/--top-p/--top-k/--sample-seed`` attach a
+``SamplingParams`` to every synthetic request (default: greedy argmax).
+``--stream`` switches the drain to ``Engine.stream`` and prints each
+request's token deltas as k-blocks retire — tokens surface with one block
+of latency, at the same one-sync-per-k-tokens schedule.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -26,11 +33,11 @@ from repro.launch.steps import make_serve_step
 from repro.dist.sharding import make_rules
 from repro.models import init_params, init_cache
 from repro.models.transformer import prefill_audio_cache
-from repro.serve import Engine, Request
+from repro.serve import Engine, Request, SamplingParams
 
 
 def _synthetic_requests(cfg, n: int, max_prompt: int, new_tokens: int,
-                        enc_len: int, seed: int = 0):
+                        enc_len: int, seed: int = 0, sampling=None):
     rng = np.random.RandomState(seed)
     reqs = []
     for i in range(n):
@@ -38,9 +45,43 @@ def _synthetic_requests(cfg, n: int, max_prompt: int, new_tokens: int,
         prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
         enc = rng.randn(enc_len, cfg.d_model).astype(np.float32) \
             if cfg.family == "audio" else None
+        sp = None
+        if sampling is not None:
+            # distinct per-request seeds derived from the CLI seed
+            sp = dataclasses.replace(sampling, seed=(sampling.seed or 0) + i)
         reqs.append(Request(id=f"req-{i}", prompt=prompt,
-                            max_new_tokens=new_tokens, enc_embeds=enc))
+                            max_new_tokens=new_tokens, enc_embeds=enc,
+                            sampling=sp))
     return reqs
+
+
+def _cli_sampling(args):
+    if args.temperature <= 0.0:
+        return None
+    return SamplingParams(temperature=args.temperature, top_p=args.top_p,
+                          top_k=args.top_k, seed=args.sample_seed)
+
+
+def serve_stream(cfg, engine, reqs, args):
+    """Streamed drain: print token deltas as each k-block retires."""
+    t0 = time.perf_counter()
+    n_deltas = 0
+    for d in engine.stream(reqs):
+        n_deltas += 1
+        if d.done:
+            r = d.response
+            print(f"  {r.id} += {d.tokens} [finish={r.finish_reason} "
+                  f"total={len(r.tokens)}]", flush=True)
+        else:
+            print(f"  {d.id} += {d.tokens}", flush=True)
+    dt = time.perf_counter() - t0
+    s = engine.stats
+    print(f"streamed {s.tokens_out} tokens across {n_deltas} deltas in "
+          f"{dt:.2f} s (incl. compile); syncs={s.syncs} "
+          f"(k={args.k}: {s.tokens_out / max(s.syncs, 1):.1f} tok/sync)")
+    print(f"stats: syncs={s.syncs} steps={s.steps} tokens_out={s.tokens_out} "
+          f"retired={s.retired} shed={s.shed} defrags={s.defrags} "
+          f"occupancy={s.occupancy:.2f}")
 
 
 def serve_engine(cfg, rules, args):
@@ -51,7 +92,12 @@ def serve_engine(cfg, rules, args):
                     enc_len=args.max_len if cfg.family == "audio" else None)
     reqs = _synthetic_requests(cfg, args.requests or 2 * args.batch,
                                min(16, args.max_len // 2), args.new_tokens,
-                               args.max_len)
+                               args.max_len, sampling=_cli_sampling(args))
+    if args.stream:
+        print(f"arch={cfg.name} engine=on stream=on slots={args.batch} "
+              f"k={args.k} requests={len(reqs)} "
+              f"temperature={args.temperature}")
+        return serve_stream(cfg, engine, reqs, args)
     for r in reqs:
         engine.submit(r)
     t0 = time.perf_counter()
@@ -133,6 +179,17 @@ def main(argv=None):
                     help="synthetic request count (default 2*batch)")
     ap.add_argument("--engine", choices=["on", "off"], default="on",
                     help="off: classic per-token whole-batch loop")
+    ap.add_argument("--stream", action="store_true",
+                    help="engine mode: print per-request token deltas as "
+                         "k-blocks retire (Engine.stream)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass (1.0 disables)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 disables)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base seed for per-request sampling streams")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)

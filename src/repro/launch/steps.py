@@ -22,16 +22,6 @@ from repro.dist.sharding import Rules
 from repro.kernels import registry
 
 
-def _build_backend(use_pallas, owner: str) -> str:
-    """Backend a step builder pins for its traces: the deprecated
-    ``use_pallas`` override when given, else the registry policy resolved at
-    build time (a later policy change does not retrace an existing step)."""
-    forced = registry.legacy_backend(use_pallas, owner=owner,
-                                     flag_name="use_pallas")
-    with registry.use(forced):
-        return registry.resolved_backend()
-
-
 class TrainState(NamedTuple):
     params: dict
     opt: OptState
@@ -40,7 +30,7 @@ class TrainState(NamedTuple):
 def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
                     peak_lr: float = 3e-4, warmup: int = 100,
                     total_steps: int = 10_000, remat: bool = True,
-                    use_pallas=None, sync_every_microbatch=False):
+                    sync_every_microbatch=False):
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves have global batch dim B; it is split into ca_k microbatches
@@ -49,10 +39,10 @@ def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
     hence k collectives per global batch — used for HLO message-count
     comparisons (paper Table I analogue).
 
-    Kernels dispatch through ``repro.kernels.registry`` (the backend is
-    resolved once here and pinned for every trace of the returned step);
-    ``use_pallas`` is a deprecated override."""
-    backend = _build_backend(use_pallas, "make_train_step")
+    Kernels dispatch through ``repro.kernels.registry``; the backend is
+    resolved once here and pinned for every trace of the returned step (a
+    later policy change does not retrace an existing step)."""
+    backend = registry.resolved_backend()
     constrain = rules.constrain if rules is not None else (lambda x, s: x)
 
     def split_micro(batch):
@@ -137,8 +127,7 @@ def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
     return train_step
 
 
-def make_serve_step(cfg, rules: Optional[Rules], *, use_pallas=None,
-                    greedy: bool = True):
+def make_serve_step(cfg, rules: Optional[Rules], *, greedy: bool = True):
     """Returns serve_step(params, cache, tokens, positions=None) ->
     (next_tokens, logits, cache).
 
@@ -147,8 +136,8 @@ def make_serve_step(cfg, rules: Optional[Rules], *, use_pallas=None,
     (``repro.serve``) drives this, the classic whole-batch path omits it.
 
     Kernels dispatch through ``repro.kernels.registry`` (backend pinned at
-    build time); ``use_pallas`` is a deprecated override."""
-    backend = _build_backend(use_pallas, "make_serve_step")
+    build time)."""
+    backend = registry.resolved_backend()
     constrain = rules.constrain if rules is not None else (lambda x, s: x)
 
     def serve_step(params, cache, tokens, positions=None):

@@ -194,33 +194,6 @@ def attention(q, k, v, *, causal: bool = True, scale=None, kv_valid_len=None,
         bq_bwd=bq_bwd, bk_bwd=bk_bwd)
 
 
-def pallas_attention(q, k, v, *, causal: bool = True, scale=None,
-                     kv_valid_len=None, chunk: Optional[int] = None,
-                     q_chunk=None):
-    """Deprecated alias: force the pallas backend for one call (falls back to
-    the XLA path for dynamic ``kv_valid_len``, as before)."""
-    with registry.use("pallas"):
-        return attention(q, k, v, causal=causal, scale=scale,
-                         kv_valid_len=kv_valid_len, chunk=chunk,
-                         q_chunk=q_chunk)
-
-
-def attention_fn(use_pallas: Optional[bool] = None):
-    """Deprecated: use :func:`attention` (registry-dispatched) directly."""
-    registry.warn_deprecated(
-        "attention_fn(use_pallas)",
-        "call models.attention.attention; select backends via "
-        "repro.kernels.registry")
-    if use_pallas is None:
-        return attention
-    forced = "pallas" if use_pallas else "xla"
-
-    def fn(q, k, v, **kw):
-        with registry.use(forced):
-            return attention(q, k, v, **kw)
-    return fn
-
-
 def _fa_make_inputs(shape, dtype=jnp.float32):
     B, Sq, Hq, D, Skv, Hkv = shape
     ks = jax.random.split(jax.random.PRNGKey(0), 3)

@@ -21,11 +21,6 @@ from repro.models.frontend import mrope_positions
 from repro.kernels import registry
 
 
-def _legacy(use_pallas, owner):
-    return registry.legacy_backend(use_pallas, owner=owner,
-                                   flag_name="use_pallas")
-
-
 def _no_constrain(x, spec):
     return x
 
@@ -215,21 +210,19 @@ def _forward(params, cfg, batch, *, constrain=_no_constrain,
 
 
 def forward(params, cfg, batch, *, constrain=_no_constrain,
-            use_pallas=None, remat: bool = False, last_only: bool = False):
+            remat: bool = False, last_only: bool = False):
     """Teacher-forced forward. Returns (logits, aux_loss).
 
     last_only: project logits for the final position only (prefill path —
     avoids materializing the (B, S, V) tensor at 32k sequence lengths).
 
-    Kernels dispatch through ``repro.kernels.registry``; ``use_pallas`` is a
-    deprecated per-call override (True -> pallas, False -> xla)."""
-    with registry.use(_legacy(use_pallas, "forward")):
-        return _forward(params, cfg, batch, constrain=constrain, remat=remat,
-                        last_only=last_only)
+    Kernels dispatch through ``repro.kernels.registry``."""
+    return _forward(params, cfg, batch, constrain=constrain, remat=remat,
+                    last_only=last_only)
 
 
 def loss_fn(params, cfg, batch, *, constrain=_no_constrain,
-            use_pallas=None, remat: bool = False,
+            remat: bool = False,
             aux_weight: float = 0.01, vocab_chunks: int = 1):
     """Next-token cross entropy (+ MoE load-balance aux).
 
@@ -238,7 +231,7 @@ def loss_fn(params, cfg, batch, *, constrain=_no_constrain,
     ``REPRO_BACKEND=pallas`` differentiation traces their backward kernels
     (FA-2-style flash attention, reverse chunk-scan SSD); only an impl
     without a VJP is routed to its XLA fallback."""
-    with registry.use(_legacy(use_pallas, "loss_fn")), registry.grad_safe():
+    with registry.grad_safe():
         logits, aux = _forward(params, cfg, batch, constrain=constrain,
                                remat=remat)
     labels = batch["labels"]
@@ -396,22 +389,19 @@ def _decode_step(params, cfg, cache, tokens, *, positions=None,
 
 
 def decode_step(params, cfg, cache, tokens, *, positions=None,
-                constrain=_no_constrain, use_pallas=None):
+                constrain=_no_constrain):
     """One decode step (see ``_decode_step`` for shapes/positions semantics).
 
-    Kernels dispatch through ``repro.kernels.registry``; ``use_pallas`` is a
-    deprecated per-call override."""
-    with registry.use(_legacy(use_pallas, "decode_step")):
-        return _decode_step(params, cfg, cache, tokens, positions=positions,
-                            constrain=constrain)
+    Kernels dispatch through ``repro.kernels.registry``."""
+    return _decode_step(params, cfg, cache, tokens, positions=positions,
+                        constrain=constrain)
 
 
 def prefill_audio_cache(params, cfg, cache, enc_embeds, *,
-                        constrain=_no_constrain, use_pallas=None):
+                        constrain=_no_constrain):
     """Run the whisper encoder and fill per-layer cross-attention K/V."""
-    with registry.use(_legacy(use_pallas, "prefill_audio_cache")):
-        return _prefill_audio_cache(params, cfg, cache, enc_embeds,
-                                    constrain=constrain)
+    return _prefill_audio_cache(params, cfg, cache, enc_embeds,
+                                constrain=constrain)
 
 
 def _prefill_audio_cache(params, cfg, cache, enc_embeds, *,

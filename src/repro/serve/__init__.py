@@ -1,20 +1,29 @@
 """Serving: continuous batching with communication-avoiding k-step decode.
 
-Five modules, one contract:
+Six modules, one contract:
 
-- ``api``       — ``Request`` / ``Response`` / ``EngineStats`` dataclasses.
+- ``api``       — ``Request`` / ``Response`` / ``StreamDelta`` /
+                  ``EngineStats`` dataclasses.
+- ``sampling``  — ``SamplingParams`` (temperature / top-p / top-k / seed)
+                  and the batched in-scan draw (``sample_tokens``): every
+                  stochastic token is drawn inside the fused block, so
+                  sampling costs zero extra host syncs.
 - ``cache``     — ``CachePool``: slot-based paged KV/SSM cache over the
-                  ``init_cache`` layouts (allocate / free / defrag), sharded
-                  via ``repro.dist.cache_specs`` when rules are bound.
+                  ``init_cache`` layouts (allocate / free / defrag) plus
+                  per-slot request PRNG keys, sharded via
+                  ``repro.dist.cache_specs`` when rules are bound.
 - ``scheduler`` — FIFO admission + ``repro.dist.DeadlineGate`` overload
                   shedding.
 - ``decode``    — the ``lax.scan``-fused k-step decode block: k tokens per
                   host sync (the paper's CA-k schedule on the serve path).
 - ``engine``    — the run loop: ingest -> schedule -> k-step decode ->
-                  retire -> stats.
+                  retire -> stats; ``stream``/``stream_step`` surface token
+                  deltas every k-block.
 """
-from repro.serve.api import (Request, Response, EngineStats, FINISH_EOS,
-                             FINISH_ERROR, FINISH_LENGTH, FINISH_SHED)
+from repro.serve.api import (Request, Response, StreamDelta, EngineStats,
+                             FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
+                             FINISH_SHED)
+from repro.serve.sampling import SamplingParams, SlotSampling, sample_tokens
 from repro.serve.cache import CachePool, SlotError
 from repro.serve.scheduler import Scheduler
 from repro.serve.decode import (DecodeState, init_decode_state,
@@ -22,8 +31,9 @@ from repro.serve.decode import (DecodeState, init_decode_state,
 from repro.serve.engine import Engine
 
 __all__ = [
-    "Request", "Response", "EngineStats",
+    "Request", "Response", "StreamDelta", "EngineStats",
     "FINISH_EOS", "FINISH_ERROR", "FINISH_LENGTH", "FINISH_SHED",
+    "SamplingParams", "SlotSampling", "sample_tokens",
     "CachePool", "SlotError", "Scheduler",
     "DecodeState", "init_decode_state", "make_decode_block",
     "Engine",

@@ -8,6 +8,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence
 
+from repro.serve.sampling import SamplingParams
+
 FINISH_EOS = "eos"          # model emitted the eos token
 FINISH_LENGTH = "length"    # hit max_new_tokens (or the cache ran out)
 FINISH_SHED = "shed"        # rejected by overload admission, never decoded
@@ -22,11 +24,14 @@ class Request:
     prompt: token ids (≥ 1; the last prompt token primes the first decode).
     enc_embeds: (enc_len, d_model) array for enc-dec (whisper) archs — the
     audio frontend is a stub repo-wide, so callers pass frame embeddings.
+    sampling: decode policy; None (or the default ``SamplingParams()``) is
+    greedy argmax, bit-identical to the pre-sampling engine.
     """
     id: str
     prompt: Sequence[int]
     max_new_tokens: int = 16
     enc_embeds: Optional[object] = None
+    sampling: Optional[SamplingParams] = None
     arrival_s: Optional[float] = None       # stamped by the engine at submit
 
 
@@ -39,6 +44,22 @@ class Response:
     prompt_len: int = 0
     queue_wait_s: float = 0.0                # submit -> slot assignment
     latency_s: float = 0.0                   # submit -> retirement
+
+
+@dataclasses.dataclass
+class StreamDelta:
+    """Per-request token increment from one fused k-block.
+
+    ``Engine.stream_step`` yields one delta per request that progressed in
+    the round: ``tokens`` are the block's newly emitted ids (possibly empty
+    when the request finished without new tokens — shed/rejected/EOS-edge),
+    ``done`` marks retirement, and ``response`` carries the final
+    :class:`Response` exactly when ``done`` is True.
+    """
+    id: str
+    tokens: List[int]
+    done: bool = False
+    response: Optional[Response] = None
 
 
 @dataclasses.dataclass

@@ -16,6 +16,12 @@ Sharding: with ``rules`` bound, the pool cache is laid out by
 ``repro.dist.cache_specs`` (batch@data, KV-sequence@model — the
 flash-decoding layout), so the serving engine runs on the same production
 meshes as the trainer.
+
+RNG state: each slot also carries a per-request PRNG key (``seed_slot`` /
+``slot_keys``) consumed by the sampled decode path (``repro.serve.sampling``).
+The key is request state, not slot state — it is seeded at admission, zeroed
+on free, and follows the request through defrag, which is what makes sampled
+token streams independent of slot placement.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import init_cache
 from repro.dist import cache_shardings
@@ -63,6 +70,8 @@ class CachePool:
         # lowest-index-first allocation keeps live slots packed at the front
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self._owner: Dict[int, str] = {}
+        # per-slot PRNG key data (jax.random.PRNGKey rows) for sampled decode
+        self._keys = np.zeros((num_slots, 2), np.uint32)
 
     # ----------------------------------------------------------- construction
     def make_cache(self):
@@ -100,8 +109,23 @@ class CachePool:
         if slot not in self._owner:
             raise SlotError(f"slot {slot} is not allocated")
         del self._owner[slot]
+        self._keys[slot] = 0               # request key dies with the request
         self._free.append(slot)
         self._free.sort(reverse=True)
+
+    # ------------------------------------------------------------- rng keys
+    def seed_slot(self, slot: int, seed: int) -> None:
+        """Bind a slot's PRNG key to a request seed (sampled decode). The
+        key is per-request: it survives defrag along with the cache rows and
+        is zeroed when the slot is freed."""
+        if slot not in self._owner:
+            raise SlotError(f"slot {slot} is not allocated")
+        self._keys[slot] = np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+    @property
+    def slot_keys(self) -> np.ndarray:
+        """(num_slots, 2) uint32 per-slot key data (zeros for greedy/free)."""
+        return self._keys
 
     def fragmentation(self) -> float:
         """Hole fraction of the occupied span [0, max live slot]."""
@@ -152,6 +176,7 @@ class CachePool:
         new_cache = jax.tree.map(f, cache, self.batch_axes)
         self._owner = {mapping[s]: rid for s, rid in self._owner.items()}
         self._free = list(range(self.num_slots - 1, len(live) - 1, -1))
+        self._keys = self._keys[np.asarray(perm)]   # keys follow their request
         return new_cache, perm, mapping
 
     def take_rows(self, per_slot, perm):

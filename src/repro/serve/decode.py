@@ -22,6 +22,11 @@ retires them at the next sync. (A frozen slot still flows through the step —
 masked compute is the price of the fused schedule — but its writes land
 beyond its own ``kv_valid`` horizon and its SSM state is zeroed on the next
 allocate, so nothing leaks across requests.)
+
+Sampling rides the same schedule: when a ``SlotSampling`` bundle is passed,
+all k next-token draws (temperature / top-p / top-k, per-slot PRNG keys)
+happen inside the scan body — see ``repro.serve.sampling`` — so stochastic
+decode costs exactly as many host syncs as greedy: one per k tokens.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch.steps import make_serve_step
+from repro.serve.sampling import SlotSampling, sample_tokens
 
 
 class DecodeState(NamedTuple):
@@ -49,25 +55,30 @@ def init_decode_state(cache, num_slots: int) -> DecodeState:
 
 
 def make_decode_block(cfg, rules, *, k: int, max_len: int,
-                      eos_id: Optional[int] = None, use_pallas=None):
+                      eos_id: Optional[int] = None):
     """Build the jitted k-step block.
 
-    block(params, state, prompts, prompt_len, max_new, active) ->
+    block(params, state, prompts, prompt_len, max_new, active, samp=None) ->
       (state', tokens (k, B) int32, emitted (k, B) bool)
 
     prompts (B, P) holds each slot's prompt; a slot is *prefilling* while
     ``lengths < prompt_len`` and *decoding* after. ``tokens[t, b]`` is valid
     iff ``emitted[t, b]`` (non-emitting steps carry -1). One host sync
     retrieves k tokens: the k-fold latency saving.
+
+    samp: optional ``SlotSampling`` — per-slot temperature/top-p/top-k and
+    PRNG keys; every draw happens inside the scan (``sample_tokens``), so
+    the sync count is unchanged. None (or all temperatures 0) is the greedy
+    path, bit-identical to the pre-sampling block.
     """
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     # kernel backend resolved by make_serve_step (registry policy at build
-    # time; use_pallas is the deprecated per-build override, forwarded)
-    serve = make_serve_step(cfg, rules, use_pallas=use_pallas)
+    # time)
+    serve = make_serve_step(cfg, rules)
 
     def block(params, state: DecodeState, prompts, prompt_len, max_new,
-              active):
+              active, samp: Optional[SlotSampling] = None):
         P = prompts.shape[1]
         B = state.lengths.shape[0]
         # Decode rewrites some cache leaves in compute dtype (the mamba conv
@@ -95,8 +106,12 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
             ptok = jnp.take_along_axis(prompts, idx[:, None], axis=1)[:, 0]
             tok = jnp.where(in_prefill, ptok, st.last_tok).astype(jnp.int32)
             pos = jnp.minimum(st.lengths, max_len - 1)
-            nxt, _, cache = serve(params, st.cache, tok[:, None], pos)
+            nxt, logits, cache = serve(params, st.cache, tok[:, None], pos)
             nxt = nxt[:, 0]
+            if samp is not None:
+                # all k draws live inside this scan — zero extra host syncs;
+                # greedy rows take the argmax above verbatim (bit parity)
+                nxt = sample_tokens(logits[:, -1], nxt, samp, st.n_out)
             # the step consuming the LAST prompt token produces the first
             # generated token; pure-prefill steps emit nothing
             emit = live & (st.lengths >= prompt_len - 1)

@@ -9,10 +9,20 @@ single host sync of the round — fetch the k emitted tokens and the per-slot
 done masks, extend per-request outputs, and retire finished slots. The block
 never recompiles: every shape (num_slots, max_prompt, k) is fixed at engine
 construction, and admission only mutates slot rows between blocks.
+
+Sampling (``Request.sampling``) changes none of that: per-slot temperature/
+top-p/top-k and the request PRNG key are slot-row state written at admission,
+and all k draws happen inside the fused block (``repro.serve.sampling``) —
+the sync count with sampling on is identical to greedy.
+
+Streaming: ``stream_step`` additionally returns per-request token deltas for
+the round (``StreamDelta``), and ``stream`` is the generator form — tokens
+surface every k-block instead of at retirement. ``step``/``run`` keep the
+whole-response contract.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional
+from typing import Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -20,10 +30,12 @@ import jax.numpy as jnp
 
 from repro.models import init_cache
 from repro.models.transformer import prefill_audio_cache
-from repro.serve.api import (Request, Response, EngineStats, FINISH_EOS,
-                             FINISH_ERROR, FINISH_LENGTH, FINISH_SHED)
+from repro.serve.api import (Request, Response, EngineStats, StreamDelta,
+                             FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
+                             FINISH_SHED)
 from repro.serve.cache import CachePool
 from repro.serve.decode import init_decode_state, make_decode_block
+from repro.serve.sampling import GREEDY, SlotSampling
 from repro.serve.scheduler import Scheduler
 
 
@@ -43,7 +55,7 @@ class Engine:
                  max_prompt: Optional[int] = None,
                  eos_id: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
-                 enc_len: Optional[int] = None, use_pallas=None,
+                 enc_len: Optional[int] = None,
                  defrag_threshold: float = 0.5):
         self.params = params
         self.cfg = cfg
@@ -59,8 +71,7 @@ class Engine:
         self.scheduler = scheduler if scheduler is not None else Scheduler()
         self.defrag_threshold = float(defrag_threshold)
         self._block = make_decode_block(cfg, rules, k=self.k,
-                                        max_len=self.max_len, eos_id=eos_id,
-                                        use_pallas=use_pallas)
+                                        max_len=self.max_len, eos_id=eos_id)
         self.state = init_decode_state(self.pool.make_cache(), num_slots)
         B, P = num_slots, self.max_prompt
         self._prompt_buf = np.zeros((B, P), np.int32)
@@ -68,6 +79,12 @@ class Engine:
         self._len_host = np.zeros((B,), np.int32)   # host mirror of lengths
         self._max_new = np.ones((B,), np.int32)
         self._active = np.zeros((B,), bool)
+        # per-slot sampling policy (written at admission; keys live in the
+        # pool so they follow the request through defrag)
+        self._temp = np.zeros((B,), np.float32)
+        self._top_p = np.ones((B,), np.float32)
+        self._top_k = np.zeros((B,), np.int32)
+        self._seed_rng = np.random.RandomState()    # for seedless requests
         self._slot_req: dict = {}
         self._slot_toks: dict = {}
         self._slot_t0: dict = {}
@@ -138,6 +155,14 @@ class Engine:
             self._len_host[slot] = 0
             self._max_new[slot] = max(int(r.max_new_tokens), 1)
             self._active[slot] = True
+            sp = r.sampling if r.sampling is not None else GREEDY
+            self._temp[slot] = sp.temperature
+            self._top_p[slot] = sp.top_p
+            self._top_k[slot] = sp.top_k
+            if not sp.greedy:
+                seed = sp.seed if sp.seed is not None \
+                    else int(self._seed_rng.randint(0, 2 ** 31 - 1))
+                self.pool.seed_slot(slot, seed)
             self._slot_req[slot] = r
             self._slot_toks[slot] = []
             self._slot_t0[slot] = now
@@ -169,24 +194,42 @@ class Engine:
         self._len_host = self._len_host[hperm]
         self._max_new = self._max_new[hperm]
         self._active = self._active[hperm]
+        self._temp = self._temp[hperm]
+        self._top_p = self._top_p[hperm]
+        self._top_k = self._top_k[hperm]
         self._slot_req = {mapping[s]: r for s, r in self._slot_req.items()}
         self._slot_toks = {mapping[s]: t for s, t in self._slot_toks.items()}
         self._slot_t0 = {mapping[s]: t for s, t in self._slot_t0.items()}
         self.stats.defrags += 1
 
     # ---------------------------------------------------------------- step
-    def step(self, now: Optional[float] = None) -> List[Response]:
-        """One scheduling round + one fused k-step block + one host sync."""
+    def stream_step(self, now: Optional[float] = None
+                    ) -> Tuple[List[StreamDelta], List[Response]]:
+        """One scheduling round + one fused k-step block + one host sync.
+
+        Returns ``(deltas, responses)``: ``responses`` are the round's
+        completed requests (retired / shed / rejected — the ``step()``
+        contract); ``deltas`` additionally surface the tokens every live
+        request gained this block, so callers can stream k tokens per sync
+        instead of waiting for retirement.
+        """
         now = self.scheduler.clock() if now is None else now
         out = self._admit(now)
+        # shed / rejected requests never held a slot: terminal delta only
+        deltas = [StreamDelta(id=r.id, tokens=[], done=True, response=r)
+                  for r in out]
         live = self.pool.live_count
         if live == 0:
-            return out
+            return deltas, out
         len_before = self._len_host   # mirrors device lengths: no extra sync
+        samp = SlotSampling(temperature=jnp.asarray(self._temp),
+                            top_p=jnp.asarray(self._top_p),
+                            top_k=jnp.asarray(self._top_k),
+                            key=jnp.asarray(self.pool.slot_keys))
         self.state, toks, emitted = self._block(
             self.params, self.state, jnp.asarray(self._prompt_buf),
             jnp.asarray(self._prompt_len), jnp.asarray(self._max_new),
-            jnp.asarray(self._active))
+            jnp.asarray(self._active), samp)
         # the round's single host sync: k tokens + per-slot masks
         toks = np.asarray(toks)
         emitted = np.asarray(emitted)
@@ -202,10 +245,13 @@ class Engine:
             [self._active].sum())
         end = self.scheduler.clock()   # same clock as admission timestamps
         for slot in list(self._slot_req):
-            got = toks[:, slot][emitted[:, slot]]
-            self._slot_toks[slot].extend(int(t) for t in got)
+            got = [int(t) for t in toks[:, slot][emitted[:, slot]]]
+            self._slot_toks[slot].extend(got)
             self.stats.tokens_out += len(got)
             if not done[slot]:
+                if got:
+                    deltas.append(StreamDelta(id=self._slot_req[slot].id,
+                                              tokens=got))
                 continue
             r = self._slot_req.pop(slot)
             seq = self._slot_toks.pop(slot)
@@ -213,15 +259,30 @@ class Engine:
             reason = FINISH_EOS if (self.eos_id is not None and seq
                                     and seq[-1] == self.eos_id) \
                 else FINISH_LENGTH
-            out.append(Response(id=r.id, tokens=seq, finish_reason=reason,
-                                prompt_len=len(r.prompt),
-                                queue_wait_s=t0 - r.arrival_s,
-                                latency_s=end - r.arrival_s))
+            resp = Response(id=r.id, tokens=seq, finish_reason=reason,
+                            prompt_len=len(r.prompt),
+                            queue_wait_s=t0 - r.arrival_s,
+                            latency_s=end - r.arrival_s)
+            out.append(resp)
+            deltas.append(StreamDelta(id=r.id, tokens=got, done=True,
+                                      response=resp))
             self.pool.free(slot)
             self._active[slot] = False
+            # reset the slot's sampling policy with it: a stale temperature
+            # in a freed slot would keep the whole-batch-greedy fast path
+            # (lax.cond in sample_tokens) from ever firing again
+            self._temp[slot] = 0.0
+            self._top_p[slot] = 1.0
+            self._top_k[slot] = 0
             self.stats.retired += 1
         self._maybe_defrag()
-        return out
+        return deltas, out
+
+    def step(self, now: Optional[float] = None) -> List[Response]:
+        """One scheduling round + one fused k-step block + one host sync;
+        returns the round's completed responses (see ``stream_step`` for the
+        token-delta form)."""
+        return self.stream_step(now)[1]
 
     # ----------------------------------------------------------------- run
     def run(self, requests: Iterable[Request] = (), *,
@@ -234,4 +295,19 @@ class Engine:
             if not len(self.scheduler) and self.pool.live_count == 0:
                 return out
             out.extend(self.step())
+        raise RuntimeError(f"engine did not drain within {max_syncs} syncs")
+
+    def stream(self, requests: Iterable[Request] = (), *,
+               max_syncs: int = 1_000_000) -> Iterator[StreamDelta]:
+        """Streaming drain: yields a ``StreamDelta`` per request per k-block
+        as tokens land; each request's final delta has ``done=True`` and
+        carries its ``Response``. Tokens therefore surface with one block of
+        latency instead of whole-response latency, at the same sync count."""
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_syncs):
+            if not len(self.scheduler) and self.pool.live_count == 0:
+                return
+            deltas, _ = self.stream_step()
+            yield from deltas
         raise RuntimeError(f"engine did not drain within {max_syncs} syncs")

@@ -1,0 +1,126 @@
+"""Stochastic token selection inside the fused CA-k decode block.
+
+The k-step decode block's whole point is one host sync per k tokens; naive
+sampling would break that (fetch logits, sample on the host, dispatch again
+— one round trip per token, the schedule the paper removes). Instead every
+draw happens on device, inside the ``lax.scan`` body: per-slot PRNG keys ride
+with the slot (seeded at admission, permuted by defrag — see
+``CachePool.seed_slot``), and the t-th generated token of a request uses
+``fold_in(request_key, t)``. Because the draw index is the *emission count*,
+not the scan step, token streams are bit-identical across k ∈ {1, 4, 16},
+across engine restarts, and independent of which slot the request lands in.
+
+Greedy stays greedy: rows with ``temperature <= 0`` take the argmax token the
+serve step already computed, bit for bit — and when the whole batch is greedy
+a ``lax.cond`` skips the sampling math entirely, so the pre-sampling engine's
+token parity tests keep their meaning unchanged.
+
+Top-k / top-p are applied batched and masked (no per-request Python): scale
+by temperature, sort descending, drop tokens ranked >= top_k and tokens
+outside the minimal prefix whose softmax mass reaches top_p, then Gumbel-max
+over the surviving logits — which IS sampling from the renormalized
+truncated distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy.
+
+    temperature: 0 (the default) is the greedy fast path — bit-identical to
+    the argmax engine. > 0 samples from softmax(logits / temperature).
+    top_p: nucleus mass; keep the minimal set of highest-probability tokens
+    whose mass is >= top_p, renormalize, sample. 1.0 disables.
+    top_k: keep only the k highest logits (0 disables).
+    seed: stream seed. Two requests with the same seed and prompt produce
+    the same tokens regardless of k, slot, or engine instance. None lets
+    the engine draw a fresh seed at admission.
+    """
+    temperature: float = 0.0
+    top_p: float = 1.0
+    top_k: int = 0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+class SlotSampling(NamedTuple):
+    """Device-side per-slot sampling state fed to the fused block each round.
+
+    All (B,)-shaped except ``key`` (B, 2) uint32 — the raw per-slot PRNG key
+    data (``jax.random.PRNGKey`` rows). Slots running greedy carry
+    temperature 0 and a zero key.
+    """
+    temperature: jnp.ndarray    # (B,) f32; <= 0 means greedy for that slot
+    top_p: jnp.ndarray          # (B,) f32
+    top_k: jnp.ndarray          # (B,) i32; 0 disables
+    key: jnp.ndarray            # (B, 2) u32 per-request PRNG key
+
+
+# a temperature-0 row still flows through the masked math under jnp.where;
+# the clamp only keeps its (discarded) lane finite
+_TEMP_FLOOR = 1e-6
+
+
+def sample_tokens(logits: jnp.ndarray, greedy_tok: jnp.ndarray,
+                  samp: SlotSampling, n_out: jnp.ndarray) -> jnp.ndarray:
+    """Draw one token per row, entirely on device.
+
+    logits: (B, V) final-position logits. greedy_tok: (B,) the argmax the
+    serve step computed (returned verbatim for greedy rows — bit parity).
+    n_out: (B,) tokens already emitted per slot; the draw for the t-th
+    generated token folds t into the slot's request key, making streams
+    independent of k-block boundaries, restarts, and slot placement.
+    """
+    greedy = samp.temperature <= 0.0
+
+    def all_greedy(_):
+        return greedy_tok
+
+    def mixed(_):
+        B, V = logits.shape
+        x = logits.astype(jnp.float32) / \
+            jnp.maximum(samp.temperature, _TEMP_FLOOR)[:, None]
+        order = jnp.argsort(-x, axis=-1)                  # descending
+        xs = jnp.take_along_axis(x, order, axis=-1)
+        probs = jax.nn.softmax(xs, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # nucleus: token i survives iff the mass strictly before it is still
+        # short of top_p — the minimal prefix with mass >= top_p (rank 0
+        # always survives since 0 < top_p)
+        keep = (cum - probs) < samp.top_p[:, None]
+        kk = jnp.where(samp.top_k > 0, samp.top_k, V)
+        keep &= jnp.arange(V)[None, :] < kk[:, None]
+        masked = jnp.where(keep, xs, -jnp.inf)
+        # Gumbel-max over the masked logits == a draw from the renormalized
+        # truncated softmax; one fresh key per (slot, emission index)
+        draw_key = jax.vmap(jax.random.fold_in)(samp.key, n_out)
+        g = jax.vmap(lambda k: jax.random.gumbel(k, (V,), jnp.float32))(
+            draw_key)
+        pick = jnp.argmax(masked + g, axis=-1)
+        sampled = jnp.take_along_axis(order, pick[:, None], axis=-1)[:, 0]
+        return jnp.where(greedy, greedy_tok, sampled.astype(jnp.int32))
+
+    # whole-batch greedy (the common serving default) skips the sort/softmax/
+    # gumbel work at runtime — one trace, branch chosen on device
+    return jax.lax.cond(jnp.all(greedy), all_greedy, mixed, None)

@@ -97,7 +97,8 @@ def test_b_controls_stochastic_error(problem):
 
 def test_kernel_paths_match_jnp(problem):
     """Forcing the pallas backend (registry policy) does not change solver
-    results; the deprecated use_kernel/backend kwargs still work and warn."""
+    results. (The PR-3 ``use_kernel``/``backend`` kwarg shims are gone:
+    the registry policy is the only backend selector.)"""
     from repro.kernels import registry
     cfg = SolverConfig(T=32, k=8, b=0.2, Q=4)
     for solver in (ca_sfista, ca_spnm):
@@ -106,14 +107,8 @@ def test_kernel_paths_match_jnp(problem):
             w_ker = solver(problem, cfg, KEY)
         np.testing.assert_allclose(np.asarray(w_jnp), np.asarray(w_ker),
                                    atol=1e-6)
-        with pytest.warns(DeprecationWarning):
-            w_legacy = solver(problem, cfg, KEY, use_kernel=True)
-        np.testing.assert_allclose(np.asarray(w_ker), np.asarray(w_legacy),
-                                   atol=1e-6)
-    with pytest.warns(DeprecationWarning):
-        w_pg = ca_sfista(problem, cfg, KEY, backend="pallas")
-    np.testing.assert_allclose(np.asarray(ca_sfista(problem, cfg, KEY)),
-                               np.asarray(w_pg), atol=1e-5)
+        with pytest.raises(TypeError):
+            solver(problem, cfg, KEY, use_kernel=True)   # shim removed
 
 
 def test_warm_start_and_history(problem):

@@ -596,32 +596,6 @@ def test_ca_solver_validates_T_divisible_by_k():
             solver(problem, cfg, KEY)
 
 
-def test_deprecated_shims_warn_and_match():
-    from repro.core import LassoProblem, SolverConfig, ca_sfista
-    from repro.models.attention import attention, attention_fn
-    ks = jax.random.split(KEY, 2)
-    X = jax.random.normal(ks[0], (6, 64))
-    problem = LassoProblem(X=X, y=X.T @ jnp.ones((6,)), lam=0.1)
-    cfg = SolverConfig(T=8, k=4, b=0.25)
-    want = ca_sfista(problem, cfg, KEY)
-    with pytest.warns(DeprecationWarning):
-        got = ca_sfista(problem, cfg, KEY, use_kernel=False)
-    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
-    with pytest.warns(DeprecationWarning):
-        got = ca_sfista(problem, cfg, KEY, backend="jnp")   # legacy alias
-    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
-
-    with pytest.warns(DeprecationWarning):
-        ssd_ops.ssd(*registry.get_op("ssd").make_inputs((1, 8, 2, 4, 4))[0],
-                    use_kernel=False)
-    with pytest.warns(DeprecationWarning):
-        fn = attention_fn(False)
-    q = jax.random.normal(ks[1], (1, 8, 2, 8))
-    np.testing.assert_array_equal(
-        np.asarray(fn(q, q, q)),
-        np.asarray(attention(q, q, q)))
-
-
 def test_shared_pad_helpers():
     from repro.kernels import pad
     assert pad.round_up(1, 8) == 8 and pad.round_up(16, 8) == 16

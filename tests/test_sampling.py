@@ -1,0 +1,242 @@
+"""repro.serve.sampling: distribution-level tests + engine determinism.
+
+Stochastic decode is untestable with exact-match assertions, so the harness
+is statistical where it must be and exact where it can be:
+
+- *distribution level*: N seeded draws through the production
+  ``sample_tokens`` path — all inside ONE jit dispatch, exactly like the k
+  draws inside the fused block — are compared against the analytic
+  temperature-softmax via a chi-squared frequency test; top-p is checked for
+  nucleus support, mass >= p, and renormalized frequencies; top-k for
+  support size. Seeded draws make every statistic deterministic, so the
+  thresholds are exact gates, not flaky tolerances.
+- *exact*: temperature -> 0 degenerates to argmax; a seed fully determines
+  the token stream across k ∈ {1, 4, 16}, across engine restarts, and
+  independent of slot placement/defrag; greedy rows in a mixed batch are
+  bit-identical to argmax; sampling never adds a host sync.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.models import init_params
+from repro.serve import Engine, Request, SamplingParams
+from repro.serve.api import FINISH_ERROR
+from repro.serve.sampling import SlotSampling, sample_tokens
+
+# fixed tiny logit vector with well-separated probabilities; argmax is 0
+LOGITS = jnp.array([2.0, 1.0, 0.0, -1.0, 0.5], jnp.float32)
+
+# chi-squared critical values at alpha = 0.001 by degrees of freedom: the
+# draws are seeded, so a pass/fail here is deterministic — the alpha only
+# calibrates how surprising a miss would be for a correct sampler
+CHI2_999 = {1: 10.83, 2: 13.82, 3: 16.27, 4: 18.47}
+
+
+def _draws(sp: SamplingParams, n: int, seed: int = 0, logits=LOGITS):
+    """N independent draws through the production sampler, one jit dispatch
+    (rows play the role of slots; distinct per-row keys, draw index 0)."""
+    V = logits.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                 i))(jnp.arange(n))
+    samp = SlotSampling(
+        temperature=jnp.full((n,), sp.temperature, jnp.float32),
+        top_p=jnp.full((n,), sp.top_p, jnp.float32),
+        top_k=jnp.full((n,), sp.top_k, jnp.int32),
+        key=jnp.asarray(keys, jnp.uint32))
+    L = jnp.broadcast_to(logits, (n, V))
+    greedy_tok = jnp.argmax(L, -1).astype(jnp.int32)
+    toks = jax.jit(sample_tokens)(L, greedy_tok, samp,
+                                  jnp.zeros((n,), jnp.int32))
+    return np.asarray(toks)
+
+
+def _chi2(toks, probs, support):
+    """Chi-squared statistic of observed token frequencies vs ``probs``
+    restricted to ``support`` (a sorted index list)."""
+    counts = np.array([(toks == i).sum() for i in support], float)
+    exp = np.asarray(probs)[support] * len(toks)
+    return float(((counts - exp) ** 2 / exp).sum())
+
+
+# ------------------------------------------------------------ distribution --
+def test_temperature_sampling_matches_softmax():
+    """Frequency chi-squared: draws from T=0.7 match softmax(logits/0.7)."""
+    T, n = 0.7, 8000
+    toks = _draws(SamplingParams(temperature=T, seed=1), n)
+    probs = np.asarray(jax.nn.softmax(LOGITS / T))
+    stat = _chi2(toks, probs / probs.sum(), list(range(5)))
+    assert stat < CHI2_999[4], f"chi2={stat:.1f} vs softmax(logits/{T})"
+
+
+def test_top_p_support_mass_and_renormalization():
+    """Nucleus sampling: draws live exactly on the minimal prefix whose
+    softmax mass reaches top_p, that mass is >= top_p, and frequencies match
+    the renormalized truncated distribution."""
+    top_p, n = 0.7, 6000
+    probs = np.asarray(jax.nn.softmax(LOGITS))
+    order = np.argsort(-probs)
+    cum = np.cumsum(probs[order])
+    nucleus = sorted(order[: int(np.searchsorted(cum, top_p) + 1)])
+    assert probs[nucleus].sum() >= top_p          # mass >= p by construction
+
+    toks = _draws(SamplingParams(temperature=1.0, top_p=top_p, seed=2), n)
+    assert set(np.unique(toks)) <= set(nucleus), \
+        f"draws escaped the nucleus {nucleus}: {sorted(set(toks))}"
+    renorm = probs / probs[nucleus].sum()         # renormalized over nucleus
+    stat = _chi2(toks, renorm, nucleus)
+    assert stat < CHI2_999[len(nucleus) - 1], f"chi2={stat:.1f}"
+
+
+def test_top_k_support_size():
+    """top_k=3 restricts the support to exactly the 3 largest logits, with
+    renormalized-softmax frequencies."""
+    top_k, n = 3, 6000
+    keep = sorted(np.argsort(-np.asarray(LOGITS))[:top_k])
+    toks = _draws(SamplingParams(temperature=1.0, top_k=top_k, seed=3), n)
+    assert set(np.unique(toks)) == set(keep)      # all 3 hit, none outside
+    probs = np.asarray(jax.nn.softmax(LOGITS))
+    stat = _chi2(toks, probs / probs[keep].sum(), keep)
+    assert stat < CHI2_999[top_k - 1], f"chi2={stat:.1f}"
+
+
+def test_temperature_to_zero_degenerates_to_argmax():
+    """T=0 is the exact greedy fast path (bitwise argmax); a tiny positive T
+    concentrates all mass on the argmax as well."""
+    n = 2000
+    toks0 = _draws(SamplingParams(temperature=0.0), n)
+    np.testing.assert_array_equal(toks0, np.zeros(n, np.int32))
+    toks_eps = _draws(SamplingParams(temperature=0.05, seed=4), n)
+    np.testing.assert_array_equal(toks_eps, np.zeros(n, np.int32))
+
+
+def test_mixed_batch_greedy_rows_bitwise_argmax():
+    """Greedy rows sharing a batch with sampled rows still take the argmax
+    token verbatim."""
+    n = 64
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(9),
+                                                 i))(jnp.arange(n))
+    greedy_mask = np.arange(n) % 2 == 0
+    samp = SlotSampling(
+        temperature=jnp.where(jnp.asarray(greedy_mask), 0.0, 5.0)
+            .astype(jnp.float32),
+        top_p=jnp.ones((n,), jnp.float32),
+        top_k=jnp.zeros((n,), jnp.int32),
+        key=jnp.asarray(keys, jnp.uint32))
+    L = jnp.broadcast_to(LOGITS, (n, 5))
+    greedy_tok = jnp.argmax(L, -1).astype(jnp.int32)
+    toks = np.asarray(jax.jit(sample_tokens)(
+        L, greedy_tok, samp, jnp.zeros((n,), jnp.int32)))
+    np.testing.assert_array_equal(toks[greedy_mask], 0)
+    assert len(set(toks[~greedy_mask])) > 1       # T=5 actually samples
+
+
+def test_sampling_params_validation():
+    for bad in (dict(temperature=-0.1), dict(top_p=0.0), dict(top_p=1.5),
+                dict(top_k=-1)):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+# ------------------------------------------------------- engine determinism --
+CFG = smoke_config(get_arch("internlm2-1.8b"))
+SP = SamplingParams(temperature=0.9, top_p=0.95, seed=42)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _target_stream(params, k, *, num_slots=3, fillers=()):
+    """Run the seeded target request (optionally behind filler requests that
+    force slot churn) and return (its tokens, the engine)."""
+    eng = Engine(params, CFG, num_slots=num_slots, max_len=32, k=k,
+                 max_prompt=8)
+    reqs = [Request(id=f"f{i}", prompt=[9 + i], max_new_tokens=mn,
+                    sampling=SamplingParams(temperature=1.2, seed=100 + i))
+            for i, mn in enumerate(fillers)]
+    reqs.append(Request(id="t", prompt=[7, 3], max_new_tokens=8, sampling=SP))
+    resps = eng.run(reqs)
+    return {r.id: r.tokens for r in resps}["t"], eng
+
+
+def test_seeded_stream_identical_across_k(params):
+    """Same SamplingParams.seed ⇒ identical token stream at k ∈ {1, 4, 16}:
+    the draw index is the emission count, not the scan step, so k-block
+    boundaries cannot shift the stream."""
+    streams = {k: _target_stream(params, k)[0] for k in (1, 4, 16)}
+    assert streams[1] == streams[4] == streams[16]
+    assert len(streams[1]) == 8
+
+
+def test_seeded_stream_identical_across_restarts(params):
+    """A fresh engine instance (new pool, new block, new jit) reproduces the
+    stream bit for bit from the request seed alone."""
+    assert _target_stream(params, 4)[0] == _target_stream(params, 4)[0]
+
+
+def test_seeded_stream_independent_of_slot_and_defrag(params):
+    """The same request produces the same tokens whether it runs alone in
+    slot 0 or lands in a churned slot and is relocated by defrag mid-stream
+    (the key rides with the request, not the slot index)."""
+    base, _ = _target_stream(params, 4)
+    # fillers sized so the target is admitted into slot 1 and the engine
+    # defrags (relocating it to slot 0) while it is still decoding
+    packed, eng = _target_stream(params, 4, num_slots=2, fillers=(6, 2))
+    assert packed == base
+    assert eng.stats.defrags >= 1, "defrag was not exercised"
+
+
+def test_sampling_adds_no_host_syncs(params):
+    """Saturated decode, identical shape: the sampled engine makes exactly
+    as many host syncs as the greedy engine — all k draws happen inside the
+    fused block."""
+    def drain(sampling):
+        eng = Engine(params, CFG, num_slots=4, max_len=32, k=4, max_prompt=4)
+        eng.run([Request(id=f"r{i}", prompt=[1 + i], max_new_tokens=8,
+                         sampling=sampling) for i in range(4)])
+        # retirement resets the slot policy: a drained engine is all-greedy
+        # again, so the lax.cond fast path can fire for the next tenant
+        assert (eng._temp <= 0.0).all()
+        return eng.stats
+    greedy = drain(None)
+    sampled = drain(SamplingParams(temperature=0.8, top_p=0.9, seed=5))
+    assert sampled.syncs == greedy.syncs
+    assert sampled.steps == sampled.syncs * 4
+    assert sampled.tokens_out == greedy.tokens_out == 4 * 8
+
+
+# ---------------------------------------------------------------- streaming --
+def test_stream_deltas_reassemble_response(params):
+    """``Engine.stream`` surfaces ≤ k tokens per request per block; the
+    concatenated deltas equal the final Response tokens and the terminal
+    delta carries the Response itself."""
+    eng = Engine(params, CFG, num_slots=2, max_len=32, k=4, max_prompt=8)
+    reqs = [Request(id="a", prompt=[7, 3], max_new_tokens=6, sampling=SP),
+            Request(id="b", prompt=[5], max_new_tokens=9)]
+    got, final = {}, {}
+    for d in eng.stream(reqs):
+        assert len(d.tokens) <= 4
+        got.setdefault(d.id, []).extend(d.tokens)
+        if d.done:
+            assert d.response is not None and d.response.id == d.id
+            final[d.id] = d.response
+    assert set(final) == {"a", "b"}
+    for rid, resp in final.items():
+        assert got[rid] == resp.tokens
+    assert len(got["a"]) == 6 and len(got["b"]) == 9
+
+
+def test_stream_terminal_delta_for_rejected_request(params):
+    """Requests that never get a slot (over-long prompt) still close their
+    stream: one empty terminal delta carrying the error Response."""
+    eng = Engine(params, CFG, num_slots=2, max_len=16, k=2, max_prompt=4)
+    deltas = list(eng.stream([Request(id="long", prompt=[1] * 5,
+                                      max_new_tokens=2)]))
+    assert len(deltas) == 1 and deltas[0].done and deltas[0].tokens == []
+    assert deltas[0].response.finish_reason == FINISH_ERROR

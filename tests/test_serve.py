@@ -20,7 +20,8 @@ from repro.configs import get_arch, smoke_config
 from repro.dist import DeadlineGate
 from repro.launch.steps import make_serve_step
 from repro.models import init_params, init_cache, decode_step
-from repro.serve import (Engine, Request, CachePool, Scheduler, SlotError,
+from repro.serve import (Engine, Request, CachePool, SamplingParams,
+                         Scheduler, SlotError,
                          FINISH_ERROR, FINISH_LENGTH, FINISH_SHED)
 
 settings.register_profile("ci", max_examples=25, deadline=None)
@@ -71,16 +72,22 @@ def test_vector_positions_match_scalar_ulp(arch_setup):
         tok = jnp.argmax(l1[:, -1], -1).astype(jnp.int32)[:, None]
 
 
+@pytest.mark.parametrize("sampling", [None, SamplingParams()],
+                         ids=["no-params", "default-params"])
 @pytest.mark.parametrize("k", [1, 4])
-def test_engine_matches_classic_loop(arch_setup, k):
+def test_engine_matches_classic_loop(arch_setup, k, sampling):
     """Continuous batching (5 ragged requests over 3 slots: admission waves,
-    slot reuse, defrag) is token-identical to the isolated per-token loop."""
+    slot reuse, defrag) is token-identical to the isolated per-token loop —
+    both without sampling params and with the default ``SamplingParams()``
+    (the greedy fast path must be bit-identical to the pre-sampling argmax
+    engine, for an attention arch and an SSM arch)."""
     cfg, params = arch_setup
     want = {f"r{i}": _classic_tokens(cfg, params, p, N_NEW)
             for i, p in enumerate(PROMPTS)}
     eng = Engine(params, cfg, num_slots=3, max_len=MAX_LEN, k=k,
                  max_prompt=8)
-    resps = eng.run([Request(id=f"r{i}", prompt=p, max_new_tokens=N_NEW)
+    resps = eng.run([Request(id=f"r{i}", prompt=p, max_new_tokens=N_NEW,
+                             sampling=sampling)
                      for i, p in enumerate(PROMPTS)])
     assert {r.id: r.tokens for r in resps} == want
     assert all(r.finish_reason == FINISH_LENGTH for r in resps)
@@ -119,11 +126,13 @@ def _slot_values(pool, cache, slot):
 @given(st.integers(0, 2 ** 31 - 1))
 def test_pool_allocate_free_defrag_invariants(seed):
     """Seeded random op sequences: a slot is never double-assigned, frees
-    only release owned slots, and defrag relocates live rows losslessly."""
+    only release owned slots, and defrag relocates live rows — including the
+    per-slot request PRNG key — losslessly."""
     rng = random.Random(seed)
     pool = CachePool(CFG_TINY, 4, 8)
     cache = pool.make_cache()
     owned = {}          # slot -> stamp value
+    rng_seeds = {}      # slot -> seed bound via seed_slot
     stamp = 0
     for _ in range(20):
         op = rng.random()
@@ -134,14 +143,18 @@ def test_pool_allocate_free_defrag_invariants(seed):
             assert 0 <= slot < pool.num_slots
             cache = _mark_slot(pool, cache, slot, stamp % 100)
             owned[slot] = stamp % 100
+            pool.seed_slot(slot, stamp)
+            rng_seeds[slot] = stamp
         elif op < 0.8 and owned:
             slot = rng.choice(sorted(owned))
             pool.free(slot)
             del owned[slot]
+            del rng_seeds[slot]
         elif owned:
             cache, perm, mapping = pool.defrag(cache)
             assert sorted(mapping) == sorted(owned)
             owned = {mapping[s]: v for s, v in owned.items()}
+            rng_seeds = {mapping[s]: v for s, v in rng_seeds.items()}
             # live slots are compacted to the front, in order
             assert pool.live_slots() == list(range(len(owned)))
         assert len(pool.live_slots()) + pool.free_count == pool.num_slots
@@ -150,6 +163,14 @@ def test_pool_allocate_free_defrag_invariants(seed):
             np.testing.assert_array_equal(
                 leaf, np.full_like(leaf, value),
                 err_msg=f"slot {slot} contents lost")
+    for slot, sd in rng_seeds.items():
+        np.testing.assert_array_equal(
+            pool.slot_keys[slot],
+            np.asarray(jax.random.PRNGKey(sd), np.uint32),
+            err_msg=f"slot {slot} rng key lost")
+    for slot in range(pool.num_slots):
+        if slot not in rng_seeds:
+            np.testing.assert_array_equal(pool.slot_keys[slot], 0)
 
 
 def test_pool_exhaustion_and_double_free_raise():
