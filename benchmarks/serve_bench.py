@@ -16,6 +16,16 @@ PR's core claim, asserted here on every pair of runs: sampling draws all k
 tokens inside the fused block, so the sampled run makes EXACTLY as many host
 syncs as the greedy run — the ``mode=sampled`` ms/step rows price the
 in-scan sampling math (sort + gumbel per step), not extra round trips.
+
+Paged rows (``layout=paged``) rerun the greedy sweep through the
+``PagedCachePool`` engine and assert token-identical output at the identical
+sync count — pricing the page-table gather against the dense slot layout.
+The ``serve-prefix`` rows drain a shared-system-prompt workload (a common
+32-token prefix, one unique tail token per request, three waves through the
+slots) with the radix prefix cache off and on: the on-run must emit
+bit-identical tokens while consuming at most half the prefill tokens, with
+the CA-k invariant (steps == syncs * k) intact on both runs. Rows record
+prefill tokens and mean resident requests per sync.
 """
 from __future__ import annotations
 
@@ -44,9 +54,9 @@ def _requests(cfg, n, seed=0, sampling=None):
             for i in range(n)]
 
 
-def _timed_drain(cfg, params, slots, k, sampling):
+def _timed_drain(cfg, params, slots, k, sampling, page_size=None):
     eng = Engine(params, cfg, num_slots=slots, max_len=NEW_TOKENS + 8,
-                 k=k, max_prompt=4)
+                 k=k, max_prompt=4, page_size=page_size)
     eng.run(_requests(cfg, slots, sampling=sampling))  # untimed: jit compile
     base_steps, base_syncs = eng.stats.steps, eng.stats.syncs
     reqs = _requests(cfg, slots, seed=1, sampling=sampling)
@@ -56,7 +66,59 @@ def _timed_drain(cfg, params, slots, k, sampling):
     steps = eng.stats.steps - base_steps
     syncs = eng.stats.syncs - base_syncs
     toks = sum(len(r.tokens) for r in out)
-    return dt, steps, syncs, toks
+    seqs = {r.id: list(r.tokens) for r in out}
+    return dt, steps, syncs, toks, seqs
+
+
+PREFIX_PAGE = 8
+PREFIX_SHARED = 32          # 4 full pages of system prompt
+PREFIX_NEW = 16
+
+
+def _prefix_requests(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, cfg.vocab, size=PREFIX_SHARED).tolist()
+    return [Request(id=f"p{i}", prompt=shared + [int(rng.randint(cfg.vocab))],
+                    max_new_tokens=PREFIX_NEW) for i in range(n)]
+
+
+def _prefix_drain(cfg, params, slots, k, prefix_cache):
+    eng = Engine(params, cfg, num_slots=slots,
+                 max_len=PREFIX_SHARED + PREFIX_NEW + 16, k=k,
+                 max_prompt=PREFIX_SHARED + 1, page_size=PREFIX_PAGE,
+                 prefix_cache=prefix_cache)
+    t0 = time.perf_counter()
+    out = eng.run(_prefix_requests(cfg, 3 * slots))
+    dt = time.perf_counter() - t0
+    return dt, eng.stats, {r.id: list(r.tokens) for r in out}
+
+
+def _prefix_sweep(cfg, params, slots=4, k=4):
+    """Shared-system-prompt workload: prefix cache off vs on."""
+    dt_off, s_off, seq_off = _prefix_drain(cfg, params, slots, k, False)
+    dt_on, s_on, seq_on = _prefix_drain(cfg, params, slots, k, True)
+    # token streams must be bit-identical with reuse on
+    assert seq_on == seq_off, "prefix cache changed the token streams"
+    # the CA-k invariant must survive prefix reuse: k steps per host sync,
+    # and skipping prefill must not ADD round trips
+    assert s_off.steps == s_off.syncs * k
+    assert s_on.steps == s_on.syncs * k, \
+        f"prefix cache broke CA-k: steps {s_on.steps} != " \
+        f"syncs {s_on.syncs} * {k}"
+    assert s_on.syncs <= s_off.syncs, \
+        f"prefix cache added syncs ({s_on.syncs} vs {s_off.syncs})"
+    # the headline claim: >= 2x fewer prefill tokens with the cache on
+    assert 2 * s_on.prefill_tokens <= s_off.prefill_tokens, \
+        f"prefix cache saved too little prefill " \
+        f"({s_on.prefill_tokens} vs {s_off.prefill_tokens})"
+    assert s_on.prefix_hits >= slots, s_on.prefix_hits
+    for tag, dt, s in (("off", dt_off, s_off), ("on", dt_on, s_on)):
+        resident = s.occupancy * slots
+        emit(f"serve-prefix/{cfg.name}/k={k},slots={slots},prefix={tag}",
+             dt / s.steps * 1e6,
+             f"prefill_tokens={s.prefill_tokens};resident={resident:.2f};"
+             f"syncs={s.syncs};prefix_hits={s.prefix_hits};"
+             f"prefix_tokens={s.prefix_tokens};cow_copies={s.cow_copies}")
 
 
 def run():
@@ -64,11 +126,12 @@ def run():
     params = init_params(cfg, jax.random.PRNGKey(0))
     for slots in (4, 16):
         for k in (1, 4, 16):
-            dt, steps, syncs, toks = _timed_drain(cfg, params, slots, k, None)
+            dt, steps, syncs, toks, seqs = _timed_drain(cfg, params, slots,
+                                                        k, None)
             emit(f"serve/{cfg.name}/k={k},slots={slots}", dt / steps * 1e6,
                  f"tok_per_s={toks / dt:.0f};ms_per_step={dt / steps * 1e3:.3f}")
-            sdt, ssteps, ssyncs, stoks = _timed_drain(cfg, params, slots, k,
-                                                      SAMPLED)
+            sdt, ssteps, ssyncs, stoks, _ = _timed_drain(cfg, params, slots,
+                                                         k, SAMPLED)
             # the CA-k invariant under sampling: one host sync per k steps,
             # zero extra syncs relative to the greedy schedule
             assert ssteps == ssyncs * k, \
@@ -80,6 +143,17 @@ def run():
                  sdt / ssteps * 1e6,
                  f"tok_per_s={stoks / sdt:.0f};"
                  f"ms_per_step={sdt / ssteps * 1e3:.3f};syncs={ssyncs}")
+            pdt, psteps, psyncs, ptoks, pseqs = _timed_drain(
+                cfg, params, slots, k, None, page_size=8)
+            # paged layout must be invisible to the schedule and the tokens
+            assert pseqs == seqs, f"k={k}: paged tokens diverged from slot"
+            assert psyncs == syncs, \
+                f"k={k}: paging changed the sync count ({psyncs} vs {syncs})"
+            emit(f"serve/{cfg.name}/k={k},slots={slots},layout=paged",
+                 pdt / psteps * 1e6,
+                 f"tok_per_s={ptoks / pdt:.0f};"
+                 f"ms_per_step={pdt / psteps * 1e3:.3f};syncs={psyncs}")
+    _prefix_sweep(cfg, params)
 
 
 if __name__ == "__main__":

@@ -198,6 +198,12 @@ def _cache_leaf_spec(path, shape: Tuple[int, ...], rules: Rules) -> P:
             layout: each model shard owns a contiguous KV-sequence slice, so
             decode attention all-reduces a (B, H, D_h) partial instead of
             gathering the cache.
+            Paged pools (``repro.serve.paging``) replace (B, S) with
+            (num_pages, page_size) at the same positions, so the identical
+            rule shards pages@dp and page rows@tp — the page pool is laid
+            out exactly the way the rows it replaced were (with the usual
+            divisibility degrade when page_size is smaller than the tp
+            axis).
     - ssm   (..., B, H, P, N):      batch@dp, heads@tp (degradable).
     - conv  (..., B, K-1, ch):      batch@dp.
     - everything else (pos, ...):   replicated.

@@ -90,6 +90,97 @@ def _flash_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
                 **kw)
 
 
+def _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
+                rows: int, pages: int):
+    del table_ref                            # consumed by the index maps
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = valid_ref[b]
+
+    # Page pruning: pages whose first position is past this row's valid
+    # length are never fetched into the softmax (their table entries may be
+    # 0, the pool's scratch page — masked to exact zero weight regardless).
+    @pl.when(ik * page_size < valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (1, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (rows, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        j = jax.lax.broadcasted_iota(jnp.int32, (1, rows), 1)
+        # rows >= page_size (sublane pad): mask both the pad rows and the
+        # positions past the row's decode depth
+        s = jnp.where((j < page_size) & (ik * page_size + j < valid),
+                      s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                            # (1, rows)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0, :, 0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(ik == pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "page_size",
+                                             "interpret"))
+def paged_flash_decode(q, k_pool, v_pool, table, valid, *, scale: float,
+                       page_size: int, interpret: bool = True):
+    """Decode attention through a scalar-prefetched page table.
+
+    q (B,Hq,D); pools (num_pages, rows, Hkv, D) with rows >= page_size
+    (sublane pad); table (B, npages) int32; valid (B,) int32. The table and
+    valid vector ride the scalar-prefetch lane so the k/v BlockSpec index
+    maps can compute HBM page addresses before the body runs — the gather
+    never materialises in HBM.
+    """
+    B, Hq, D = q.shape
+    rows, Hkv = k_pool.shape[1], k_pool.shape[2]
+    group = Hq // Hkv
+    npages = table.shape[1]
+
+    kernel = functools.partial(_paged_body, scale=scale, page_size=page_size,
+                               rows=rows, pages=npages)
+    # index maps receive (*grid_indices, *scalar_prefetch_refs)
+    kv_spec = pl.BlockSpec(
+        (1, rows, 1, D), lambda b, h, ik, t, n: (t[b, ik], 0, h // group, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, ik, t, n: (b, h, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ik, t, n: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),    # acc
+            pltpu.VMEM((1, 1), jnp.float32),    # running max m
+            pltpu.VMEM((1, 1), jnp.float32),    # running denom l
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(table, valid, q, k_pool, v_pool)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "scale", "bq", "bk", "kv_len", "q_offset", "interpret",
     "return_lse"))

@@ -115,6 +115,37 @@ def flash_attention_bwd(res, do, *, causal: bool = True,
     return dq, dk, dv
 
 
+def paged_flash_decode(q, k_pool, v_pool, page_table, kv_valid_len, *,
+                       scale: float | None = None,
+                       interpret: bool | None = None):
+    """Decode attention over a paged KV pool, model layout.
+
+    q (B,1,Hq,D); pools (num_pages, page_size, Hkv, D); page_table
+    (B, npages) int32; kv_valid_len scalar or (B,) int32 -> (B,1,Hq,D).
+    Pads head dim to the 128-lane boundary and the page rows to the sublane
+    multiple (the kernel masks pad rows with the logical ``page_size``).
+    """
+    B, S, Hq, D = q.shape
+    if S != 1:
+        raise ValueError(f"paged decode expects a single query, got S={S}")
+    P, Hkv = k_pool.shape[1], k_pool.shape[2]
+    if Hq % Hkv:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {Hq=} {Hkv=}")
+    scale = (D ** -0.5) if scale is None else scale
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Dp = pad.round_up(D, LANE)
+    rows = pad.round_up(P, 8)
+    qp = pad.pad_dims(q[:, 0], {2: Dp})
+    kp = pad.pad_dims(k_pool, {1: rows, 3: Dp})
+    vp = pad.pad_dims(v_pool, {1: rows, 3: Dp})
+    table = jnp.asarray(page_table, jnp.int32)
+    valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (B,))
+    out = _k.paged_flash_decode(qp, kp, vp, table, valid, scale=scale,
+                                page_size=P, interpret=interpret)
+    return pad.unpad_dims(out, {2: D})[:, None]
+
+
 flash_attention = registry.custom_vjp_fn(
     _flash_attention_impl, flash_attention_fwd, flash_attention_bwd)
 flash_attention.__doc__ = """GQA flash attention with a custom VJP.

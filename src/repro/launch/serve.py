@@ -89,7 +89,9 @@ def serve_engine(cfg, rules, args):
     engine = Engine(params, cfg, rules=rules, num_slots=args.batch,
                     max_len=args.max_len, k=args.k,
                     max_prompt=min(16, args.max_len // 2),
-                    enc_len=args.max_len if cfg.family == "audio" else None)
+                    enc_len=args.max_len if cfg.family == "audio" else None,
+                    page_size=args.page_size or None,
+                    prefix_cache=args.prefix_cache)
     reqs = _synthetic_requests(cfg, args.requests or 2 * args.batch,
                                min(16, args.max_len // 2), args.new_tokens,
                                args.max_len, sampling=_cli_sampling(args))
@@ -120,6 +122,11 @@ def serve_engine(cfg, rules, args):
     print(f"stats: syncs={s.syncs} steps={s.steps} tokens_out={s.tokens_out} "
           f"prefill_tokens={s.prefill_tokens} retired={s.retired} "
           f"shed={s.shed} defrags={s.defrags} occupancy={s.occupancy:.2f}")
+    if engine.paged:
+        print(f"paged: page_size={engine.pool.page_size} "
+              f"pages={engine.pool.num_pages} "
+              f"prefix_hits={s.prefix_hits} prefix_tokens={s.prefix_tokens} "
+              f"cow_copies={s.cow_copies} page_defrags={s.page_defrags}")
     for r in sorted(responses, key=lambda r: r.id)[:2]:
         print(f"  {r.id}: finish={r.finish_reason} tokens={r.tokens[:16]}")
     return responses
@@ -190,6 +197,13 @@ def main(argv=None):
                     help="top-k truncation (0 disables)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base seed for per-request sampling streams")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="engine mode: tokens per KV page (0 = whole-row "
+                         "slot cache; token streams identical either way)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="engine mode, with --page-size: reuse radix-trie "
+                         "shared prompt-prefix pages across requests and "
+                         "skip their prefill steps")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)

@@ -128,23 +128,26 @@ def make_train_step(cfg, rules: Optional[Rules], *, ca_k: int = 8,
 
 
 def make_serve_step(cfg, rules: Optional[Rules], *, greedy: bool = True):
-    """Returns serve_step(params, cache, tokens, positions=None) ->
-    (next_tokens, logits, cache).
+    """Returns serve_step(params, cache, tokens, positions=None,
+    page_table=None) -> (next_tokens, logits, cache).
 
     positions: optional (B,) per-slot decode depths — see
     ``repro.models.decode_step``; the continuous-batching engine
     (``repro.serve``) drives this, the classic whole-batch path omits it.
+    page_table: optional (B, pages_per_slot) int32 when the cache K/V leaves
+    are a paged pool (``repro.serve.paging``).
 
     Kernels dispatch through ``repro.kernels.registry`` (backend pinned at
     build time)."""
     backend = registry.resolved_backend()
     constrain = rules.constrain if rules is not None else (lambda x, s: x)
 
-    def serve_step(params, cache, tokens, positions=None):
+    def serve_step(params, cache, tokens, positions=None, page_table=None):
         with registry.use(backend):
             logits, cache = decode_step(params, cfg, cache, tokens,
                                         positions=positions,
-                                        constrain=constrain)
+                                        constrain=constrain,
+                                        page_table=page_table)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, logits, cache
 

@@ -217,6 +217,75 @@ def _fa_bwd_candidates(backend, shape):
             for bk in (32, 128, 512)]
 
 
+def paged_attention(q, k_pool, v_pool, page_table, kv_valid_len, *,
+                    scale=None, chunk: Optional[int] = None, interpret=None):
+    """Backend-dispatched decode attention over a paged KV pool.
+
+    q (B,1,Hq,D); pools (num_pages, page_size, Hkv, D); page_table
+    (B, pages_per_slot) int32 mapping each batch row's logical pages to pool
+    pages; kv_valid_len (B,) int32 valid KV length per row. Rows past
+    ``kv_valid_len`` — including everything reached through table entry 0,
+    the serve layer's scratch page — are masked out exactly (finite values,
+    zero weight), so pool garbage never perturbs the output.
+
+    The xla impl gathers the table into dense rows and reuses
+    :func:`chunked_attention` — bitwise the slot-engine decode path. The
+    pallas impl (decode-only, S == 1) indexes the pool directly through a
+    scalar-prefetched table, never materialising the gather.
+    """
+    return registry.dispatch(
+        "paged_attention", q, k_pool, v_pool, page_table, kv_valid_len,
+        scale=scale, chunk=chunk, interpret=interpret)
+
+
+def _paged_attention_xla(q, k_pool, v_pool, page_table, kv_valid_len, *,
+                         scale=None, chunk: Optional[int] = None,
+                         interpret=None):
+    del interpret                                  # pallas-only knob
+    B = q.shape[0]
+    Hkv, D = k_pool.shape[2], k_pool.shape[3]
+    k = k_pool[page_table].reshape(B, -1, Hkv, D)
+    v = v_pool[page_table].reshape(B, -1, Hkv, D)
+    # decode reads are right-aligned single queries: causal=False + the
+    # per-row kv_valid mask is the exact slot-engine semantics
+    return chunked_attention(q, k, v, causal=False,
+                             chunk=chunk or KV_CHUNK_DEFAULT, scale=scale,
+                             kv_valid_len=kv_valid_len)
+
+
+def _paged_attention_pallas(q, k_pool, v_pool, page_table, kv_valid_len, *,
+                            scale=None, chunk: Optional[int] = None,
+                            interpret=None):
+    del chunk                                      # xla-only knob
+    return _fa_ops.paged_flash_decode(q, k_pool, v_pool, page_table,
+                                      kv_valid_len, scale=scale,
+                                      interpret=interpret)
+
+
+def _paged_make_inputs(shape, dtype=jnp.float32):
+    B, Hq, D, Hkv, npg, P = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (1 + B * npg, P, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (1 + B * npg, P, Hkv, D), dtype)
+    table = jnp.arange(1, 1 + B * npg, dtype=jnp.int32).reshape(B, npg)
+    valid = jnp.full((B,), npg * P, jnp.int32)
+    return (q, k, v, table, valid), {}
+
+
+registry.describe(
+    "paged_attention",
+    shape_of=lambda q, k, v, t, n, **kw: (q.shape[0], q.shape[2], q.shape[3],
+                                          k.shape[2], t.shape[1], k.shape[1]),
+    make_inputs=_paged_make_inputs)
+registry.register("paged_attention", "xla",
+                  tunables=("chunk",))(_paged_attention_xla)
+registry.register(
+    "paged_attention", "pallas", differentiable=False,
+    supports=lambda q, *a, **kw: q.shape[1] == 1,
+)(_paged_attention_pallas)
+
+
 registry.describe(
     "flash_attention",
     shape_of=lambda q, k, v, **kw: (q.shape[0], q.shape[1], q.shape[2],

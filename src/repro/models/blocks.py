@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (rms_norm, apply_rope, apply_mrope, dense_init)
-from repro.models.attention import attention
+from repro.models.attention import attention, paged_attention
 from repro.models.mlp import init_swiglu, swiglu
 from repro.models.moe import init_moe, moe_ffn
 
@@ -62,7 +62,7 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
                  positions=None, mrope_pos=None, rope_theta: float = 1e4,
                  causal: bool = True, cache: Optional[dict] = None,
                  cache_pos=None, kv_override=None, constrain=lambda x, s: x,
-                 attn_chunk: Optional[int] = None):
+                 attn_chunk: Optional[int] = None, page_table=None):
     """GQA attention. x (B,S,d).
 
     cache: dict(k=(B,Smax,Hkv,Dh), v=...) updated at cache_pos (decode).
@@ -70,6 +70,10 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
     int32 (per-slot depths — the continuous-batching serve path; each batch
     row writes and masks at its own position).
     kv_override: (k, v) tuple for cross-attention (whisper decoder).
+    page_table: (B, pages_per_slot) int32 — the cache leaves are a paged
+    pool (num_pages, page_size, Hkv, Dh) and position p of batch row b lives
+    at pool page ``page_table[b, p // page_size]``, row ``p % page_size``
+    (decode-only: requires S == 1 and per-row ``cache_pos``).
     Returns (out, new_cache).
     """
     B, S, d = x.shape
@@ -107,6 +111,22 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
 
     new_cache = cache
     kv_valid = None
+    if cache is not None and page_table is not None:
+        if S != 1 or not getattr(cache_pos, "ndim", 0):
+            raise ValueError("paged KV cache is decode-only: S == 1 with "
+                             "per-row cache_pos")
+        P_pg = cache["k"].shape[1]
+        pidx = jnp.take_along_axis(page_table, cache_pos[:, None] // P_pg,
+                                   axis=1)[:, 0]
+        off = cache_pos % P_pg
+        kc = cache["k"].at[pidx, off].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[pidx, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = dict(k=kc, v=vc)
+        o = paged_attention(q, kc, vc, page_table, cache_pos + 1,
+                            chunk=attn_chunk)
+        o = o.reshape(B, S, n_heads * head_dim)
+        out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
+        return constrain(out, ("batch", None, None)), new_cache
     if cache is not None:
         if getattr(cache_pos, "ndim", 0):      # (B,) per-slot write positions
             upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
@@ -151,13 +171,13 @@ def init_dense_block(key, cfg, dtype=jnp.float32):
 
 
 def dense_block(params, x, cfg, *, pos_info, cache=None, cache_pos=None,
-                constrain=lambda x, s: x):
+                constrain=lambda x, s: x, page_table=None):
     h, new_cache = attn_forward(
         params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         positions=pos_info.get("positions"), mrope_pos=pos_info.get("mrope"),
         rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
-        constrain=constrain)
+        constrain=constrain, page_table=page_table)
     x = x + h
     x = x + swiglu(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps),
                    constrain)
@@ -178,13 +198,13 @@ def init_moe_block(key, cfg, dtype=jnp.float32):
 
 
 def moe_block(params, x, cfg, *, pos_info, cache=None, cache_pos=None,
-              constrain=lambda x, s: x):
+              constrain=lambda x, s: x, page_table=None):
     h, new_cache = attn_forward(
         params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         positions=pos_info.get("positions"), mrope_pos=pos_info.get("mrope"),
         rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
-        constrain=constrain)
+        constrain=constrain, page_table=page_table)
     x = x + h
     m, aux = moe_ffn(params["moe"], rms_norm(x, params["ln2"], cfg.norm_eps),
                      top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,

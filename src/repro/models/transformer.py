@@ -287,7 +287,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def _decode_step(params, cfg, cache, tokens, *, positions=None,
-                 constrain=_no_constrain):
+                 constrain=_no_constrain, page_table=None):
     """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache).
 
     positions: optional (B,) int32 per-slot decode depths (continuous-batching
@@ -295,7 +295,13 @@ def _decode_step(params, cfg, cache, tokens, *, positions=None,
     writes its KV at its own cache index; ``cache["pos"]`` is ignored for
     addressing (the caller owns per-slot lengths) but still advanced so the
     pytree keeps its classic-path meaning. Default: the scalar ``cache["pos"]``
-    shared by the whole batch."""
+    shared by the whole batch.
+
+    page_table: optional (B, pages_per_slot) int32 — the attention K/V
+    leaves are a paged pool (see ``repro.serve.paging``) and every attention
+    read/write goes through the table. Requires per-row ``positions``.
+    Recurrent leaves (mamba conv/ssm, whisper cross-K/V) are pageless and
+    ignore it."""
     fam = cfg.family
     B = tokens.shape[0]
     if positions is None:
@@ -316,17 +322,20 @@ def _decode_step(params, cfg, cache, tokens, *, positions=None,
             dense_cfg = cfg.scaled(d_ff=cfg.dense_d_ff)
             x, c0 = dense_block(params["dense0"], x, dense_cfg,
                                 pos_info=pos_info, cache=cache["dense0"],
-                                cache_pos=pos, constrain=constrain)
+                                cache_pos=pos, constrain=constrain,
+                                page_table=page_table)
             cache = dict(cache, dense0=c0)
 
         def body(x, inp):
             lp, cl = inp
             if fam == "moe":
                 y, nc, _ = moe_block(lp, x, cfg, pos_info=pos_info, cache=cl,
-                                     cache_pos=pos, constrain=constrain)
+                                     cache_pos=pos, constrain=constrain,
+                                     page_table=page_table)
             else:
                 y, nc = dense_block(lp, x, cfg, pos_info=pos_info, cache=cl,
-                                    cache_pos=pos, constrain=constrain)
+                                    cache_pos=pos, constrain=constrain,
+                                    page_table=page_table)
             return y, nc
         x, new_caches = jax.lax.scan(body, x, (params["layers"],
                                                cache["layers"]))
@@ -360,7 +369,7 @@ def _decode_step(params, cfg, cache, tokens, *, positions=None,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                 head_dim=cfg.head_dim, positions=positions,
                 rope_theta=cfg.rope_theta, cache=skv, cache_pos=pos,
-                constrain=constrain)
+                constrain=constrain, page_table=page_table)
             return x + h, (new_st, new_skv)
         x, (new_st, new_skv) = jax.lax.scan(
             super_body, x, (params["layers"], cache["layers"],
@@ -373,7 +382,8 @@ def _decode_step(params, cfg, cache, tokens, *, positions=None,
             y, nc = encdec.dec_block(lp, x, cfg, kv_cross=(cross["k"],
                                                            cross["v"]),
                                      positions=positions, cache=cl,
-                                     cache_pos=pos, constrain=constrain)
+                                     cache_pos=pos, constrain=constrain,
+                                     page_table=page_table)
             return y, nc
         x, new_caches = jax.lax.scan(body, x, (params["layers"],
                                                cache["layers"],
@@ -389,12 +399,12 @@ def _decode_step(params, cfg, cache, tokens, *, positions=None,
 
 
 def decode_step(params, cfg, cache, tokens, *, positions=None,
-                constrain=_no_constrain):
+                constrain=_no_constrain, page_table=None):
     """One decode step (see ``_decode_step`` for shapes/positions semantics).
 
     Kernels dispatch through ``repro.kernels.registry``."""
     return _decode_step(params, cfg, cache, tokens, positions=positions,
-                        constrain=constrain)
+                        constrain=constrain, page_table=page_table)
 
 
 def prefill_audio_cache(params, cfg, cache, enc_embeds, *,

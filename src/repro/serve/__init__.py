@@ -8,10 +8,14 @@ Six modules, one contract:
                   and the batched in-scan draw (``sample_tokens``): every
                   stochastic token is drawn inside the fused block, so
                   sampling costs zero extra host syncs.
-- ``cache``     — ``CachePool``: slot-based paged KV/SSM cache over the
+- ``cache``     — ``CachePool``: slot-based KV/SSM cache over the
                   ``init_cache`` layouts (allocate / free / defrag) plus
                   per-slot request PRNG keys, sharded via
                   ``repro.dist.cache_specs`` when rules are bound.
+- ``paging``    — ``PagedCachePool``: sub-slot fixed-size pages behind
+                  per-slot page tables, with refcounted radix-trie
+                  shared-prefix reuse (``PrefixCache``) and page-level
+                  defrag; token streams identical to the slot pool.
 - ``scheduler`` — FIFO admission + ``repro.dist.DeadlineGate`` overload
                   shedding.
 - ``decode``    — the ``lax.scan``-fused k-step decode block: k tokens per
@@ -25,6 +29,7 @@ from repro.serve.api import (Request, Response, StreamDelta, EngineStats,
                              FINISH_SHED)
 from repro.serve.sampling import SamplingParams, SlotSampling, sample_tokens
 from repro.serve.cache import CachePool, SlotError
+from repro.serve.paging import PagedCachePool, PrefixCache, PageError
 from repro.serve.scheduler import Scheduler
 from repro.serve.decode import (DecodeState, init_decode_state,
                                 make_decode_block)
@@ -35,6 +40,7 @@ __all__ = [
     "FINISH_EOS", "FINISH_ERROR", "FINISH_LENGTH", "FINISH_SHED",
     "SamplingParams", "SlotSampling", "sample_tokens",
     "CachePool", "SlotError", "Scheduler",
+    "PagedCachePool", "PrefixCache", "PageError",
     "DecodeState", "init_decode_state", "make_decode_block",
     "Engine",
 ]

@@ -25,6 +25,7 @@ token streams independent of slot placement.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -67,8 +68,9 @@ class CachePool:
         self.enc_len = enc_len
         self.rules = rules
         self.batch_axes = _batch_axes(cfg, max_len, enc_len)
-        # lowest-index-first allocation keeps live slots packed at the front
-        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        # min-heap: lowest-index-first allocation keeps live slots packed at
+        # the front, and free stays O(log n) instead of a full re-sort
+        self._free: List[int] = list(range(num_slots))
         self._owner: Dict[int, str] = {}
         # per-slot PRNG key data (jax.random.PRNGKey rows) for sampled decode
         self._keys = np.zeros((num_slots, 2), np.uint32)
@@ -100,7 +102,7 @@ class CachePool:
     def allocate(self, request_id: str) -> int:
         if not self._free:
             raise SlotError("cache pool exhausted")
-        slot = self._free.pop()
+        slot = heapq.heappop(self._free)
         assert slot not in self._owner, "free list / owner map out of sync"
         self._owner[slot] = request_id
         return slot
@@ -110,8 +112,7 @@ class CachePool:
             raise SlotError(f"slot {slot} is not allocated")
         del self._owner[slot]
         self._keys[slot] = 0               # request key dies with the request
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        heapq.heappush(self._free, slot)
 
     # ------------------------------------------------------------- rng keys
     def seed_slot(self, slot: int, seed: int) -> None:
@@ -175,7 +176,8 @@ class CachePool:
 
         new_cache = jax.tree.map(f, cache, self.batch_axes)
         self._owner = {mapping[s]: rid for s, rid in self._owner.items()}
-        self._free = list(range(self.num_slots - 1, len(live) - 1, -1))
+        # ascending range is already a valid min-heap
+        self._free = list(range(len(live), self.num_slots))
         self._keys = self._keys[np.asarray(perm)]   # keys follow their request
         return new_cache, perm, mapping
 

@@ -46,19 +46,23 @@ class DecodeState(NamedTuple):
     last_tok: jnp.ndarray    # (B,) int32: last sampled token per slot
     n_out: jnp.ndarray       # (B,) int32: tokens emitted per slot
     done: jnp.ndarray        # (B,) bool: EOS / length / cache-full reached
+    eos_hit: jnp.ndarray     # (B,) bool: done fired on the EOS branch (and
+                             # no length cause fired the same step)
 
 
 def init_decode_state(cache, num_slots: int) -> DecodeState:
     z = jnp.zeros((num_slots,), jnp.int32)
+    f = jnp.zeros((num_slots,), bool)
     return DecodeState(cache=cache, lengths=z, last_tok=z, n_out=z,
-                       done=jnp.zeros((num_slots,), bool))
+                       done=f, eos_hit=f)
 
 
 def make_decode_block(cfg, rules, *, k: int, max_len: int,
                       eos_id: Optional[int] = None):
     """Build the jitted k-step block.
 
-    block(params, state, prompts, prompt_len, max_new, active, samp=None) ->
+    block(params, state, prompts, prompt_len, max_new, active, samp=None,
+          page_table=None) ->
       (state', tokens (k, B) int32, emitted (k, B) bool)
 
     prompts (B, P) holds each slot's prompt; a slot is *prefilling* while
@@ -70,6 +74,11 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
     PRNG keys; every draw happens inside the scan (``sample_tokens``), so
     the sync count is unchanged. None (or all temperatures 0) is the greedy
     path, bit-identical to the pre-sampling block.
+
+    page_table: optional (B, pages_per_slot) int32 when the cache K/V
+    leaves are a paged pool (``repro.serve.paging``). The engine reserves
+    pages covering the block's k steps before dispatch, so the table is a
+    constant input to the scan, not part of the carry.
     """
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
@@ -78,7 +87,7 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
     serve = make_serve_step(cfg, rules)
 
     def block(params, state: DecodeState, prompts, prompt_len, max_new,
-              active, samp: Optional[SlotSampling] = None):
+              active, samp: Optional[SlotSampling] = None, page_table=None):
         P = prompts.shape[1]
         B = state.lengths.shape[0]
         # Decode rewrites some cache leaves in compute dtype (the mamba conv
@@ -88,7 +97,7 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
         sds = jax.ShapeDtypeStruct
         target = jax.eval_shape(serve, params, state.cache,
                                 sds((B, 1), jnp.int32),
-                                sds((B,), jnp.int32))[2]
+                                sds((B,), jnp.int32), page_table)[2]
         state = state._replace(cache=jax.tree.map(
             lambda x, t: x.astype(t.dtype), state.cache, target))
 
@@ -106,7 +115,8 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
             ptok = jnp.take_along_axis(prompts, idx[:, None], axis=1)[:, 0]
             tok = jnp.where(in_prefill, ptok, st.last_tok).astype(jnp.int32)
             pos = jnp.minimum(st.lengths, max_len - 1)
-            nxt, logits, cache = serve(params, st.cache, tok[:, None], pos)
+            nxt, logits, cache = serve(params, st.cache, tok[:, None], pos,
+                                       page_table)
             nxt = nxt[:, 0]
             if samp is not None:
                 # all k draws live inside this scan — zero extra host syncs;
@@ -116,16 +126,23 @@ def make_decode_block(cfg, rules, *, k: int, max_len: int,
             # generated token; pure-prefill steps emit nothing
             emit = live & (st.lengths >= prompt_len - 1)
             n_out = st.n_out + emit.astype(jnp.int32)
-            done = done0 | (emit & (n_out >= max_new)) \
+            # length causes (max_new, cache-full) take precedence over a
+            # coincident EOS draw: finish_reason is derived from eos_hit
+            len_done = (emit & (n_out >= max_new)) \
                 | (live & (st.lengths >= max_len - 1))
+            done = done0 | len_done
+            eos_hit = st.eos_hit
             if eos_id is not None:
-                done = done | (emit & (nxt == eos_id))
+                eos_now = emit & (nxt == eos_id)
+                done = done | eos_now
+                eos_hit = eos_hit | (eos_now & ~len_done & ~done0)
             new = DecodeState(
                 cache=cache,
                 lengths=st.lengths + live.astype(jnp.int32),
                 last_tok=jnp.where(live, nxt, st.last_tok),
                 n_out=n_out,
-                done=done)
+                done=done,
+                eos_hit=eos_hit)
             return new, (jnp.where(emit, nxt, -1), emit)
 
         state, (toks, emitted) = jax.lax.scan(body, state, xs=None, length=k)

@@ -34,6 +34,7 @@ from repro.serve.api import (Request, Response, EngineStats, StreamDelta,
                              FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
                              FINISH_SHED)
 from repro.serve.cache import CachePool
+from repro.serve.paging import PagedCachePool
 from repro.serve.decode import init_decode_state, make_decode_block
 from repro.serve.sampling import GREEDY, SlotSampling
 from repro.serve.scheduler import Scheduler
@@ -48,6 +49,17 @@ class Engine:
     eos_id: greedy decode stops a slot on this token (None: length-only).
     scheduler: admission policy; default plain FIFO (pass
     ``Scheduler(gate=DeadlineGate(...))`` for overload shedding).
+    page_size: switch the attention K/V leaves to a paged pool
+    (``repro.serve.paging``) with this many tokens per page; None keeps the
+    whole-row slot layout. Token streams are identical either way. A
+    pure-SSM arch has no pageable leaves and silently keeps the slot pool.
+    prefix_cache: with paging on, reuse radix-trie shared prompt-prefix
+    pages across requests (their prefill steps are skipped). Enabled only
+    for families whose prompt K/V depends on the tokens alone — recurrent
+    state must consume every prompt token, and whisper's decoder K/V mixes
+    in per-request encoder output — so ssm/hybrid/audio decline it.
+    num_pages: page-pool depth override (default: full slot backing + 1
+    scratch page).
     """
 
     def __init__(self, params, cfg, *, rules=None, num_slots: int = 8,
@@ -56,7 +68,10 @@ class Engine:
                  eos_id: Optional[int] = None,
                  scheduler: Optional[Scheduler] = None,
                  enc_len: Optional[int] = None,
-                 defrag_threshold: float = 0.5):
+                 defrag_threshold: float = 0.5,
+                 page_size: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 num_pages: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.k = int(k)
@@ -66,8 +81,20 @@ class Engine:
         self.eos_id = eos_id
         enc_len = (enc_len if enc_len is not None else max_len) \
             if cfg.family == "audio" else None
-        self.pool = CachePool(cfg, num_slots, max_len, rules=rules,
-                              enc_len=enc_len)
+        pool: Optional[CachePool] = None
+        if page_size is not None:
+            pool = PagedCachePool(cfg, num_slots, max_len,
+                                  page_size=page_size, rules=rules,
+                                  enc_len=enc_len, num_pages=num_pages)
+            if not pool.has_paged:
+                pool = None                 # pure-SSM: nothing to page
+        if pool is None:
+            pool = CachePool(cfg, num_slots, max_len, rules=rules,
+                             enc_len=enc_len)
+        self.pool = pool
+        self.paged = isinstance(pool, PagedCachePool)
+        self.prefix_on = (bool(prefix_cache) and self.paged
+                          and cfg.family in ("dense", "vlm", "moe"))
         self.scheduler = scheduler if scheduler is not None else Scheduler()
         self.defrag_threshold = float(defrag_threshold)
         self._block = make_decode_block(cfg, rules, k=self.k,
@@ -88,6 +115,7 @@ class Engine:
         self._slot_req: dict = {}
         self._slot_toks: dict = {}
         self._slot_t0: dict = {}
+        self._slot_prompt: dict = {}    # int token lists for the prefix trie
         self.stats = EngineStats()
         if cfg.family == "audio":
             row = lambda p, enc: prefill_audio_cache(
@@ -126,7 +154,8 @@ class Engine:
                                 latency_s=wait))
             self.stats.shed += 1
         st = self.state
-        slots = []
+        slots: List[int] = []
+        init_lens: List[int] = []
         for r in admit:
             n = len(r.prompt)
             if n > self.max_prompt or n >= self.max_len:
@@ -149,10 +178,26 @@ class Engine:
             else:
                 cache = self.pool.zero_slot(st.cache, slot)
             st = st._replace(cache=cache)
+            prompt = [int(t) for t in r.prompt]
+            m = 0
+            if self.prefix_on:
+                # shared-prefix reuse: trie-matched pages map read-only
+                # into this slot's table and their prefill steps vanish —
+                # the slot starts decoding at lengths == m
+                m, cow = self.pool.map_prefix(slot, prompt)
+                if cow is not None:
+                    st = st._replace(
+                        cache=self.pool.copy_page(st.cache, *cow))
+                    self.stats.cow_copies += 1
+                if m:
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_tokens += m
             self._prompt_buf[slot, :] = 0
             self._prompt_buf[slot, :n] = np.asarray(r.prompt, np.int32)
             self._prompt_len[slot] = n
-            self._len_host[slot] = 0
+            self._len_host[slot] = m
+            init_lens.append(m)
+            self._slot_prompt[slot] = prompt
             self._max_new[slot] = max(int(r.max_new_tokens), 1)
             self._active[slot] = True
             sp = r.sampling if r.sampling is not None else GREEDY
@@ -170,37 +215,53 @@ class Engine:
         if slots:
             idx = jnp.asarray(slots, jnp.int32)
             z = jnp.zeros((len(slots),), jnp.int32)
-            st = st._replace(lengths=st.lengths.at[idx].set(z),
-                             last_tok=st.last_tok.at[idx].set(z),
-                             n_out=st.n_out.at[idx].set(z),
-                             done=st.done.at[idx].set(False))
+            st = st._replace(
+                lengths=st.lengths.at[idx].set(
+                    jnp.asarray(init_lens, jnp.int32)),
+                last_tok=st.last_tok.at[idx].set(z),
+                n_out=st.n_out.at[idx].set(z),
+                done=st.done.at[idx].set(False),
+                eos_hit=st.eos_hit.at[idx].set(False))
         self.state = st
         return out
 
     # -------------------------------------------------------------- defrag
     def _maybe_defrag(self) -> None:
-        if self.pool.live_count == 0 or \
-                self.pool.fragmentation() < self.defrag_threshold:
-            return
-        cache, perm, mapping = self.pool.defrag(self.state.cache)
-        take = lambda a: self.pool.take_rows(a, perm)
-        self.state = self.state._replace(
-            cache=cache, lengths=take(self.state.lengths),
-            last_tok=take(self.state.last_tok), n_out=take(self.state.n_out),
-            done=take(self.state.done))
-        hperm = np.asarray(perm)
-        self._prompt_buf = self._prompt_buf[hperm]
-        self._prompt_len = self._prompt_len[hperm]
-        self._len_host = self._len_host[hperm]
-        self._max_new = self._max_new[hperm]
-        self._active = self._active[hperm]
-        self._temp = self._temp[hperm]
-        self._top_p = self._top_p[hperm]
-        self._top_k = self._top_k[hperm]
-        self._slot_req = {mapping[s]: r for s, r in self._slot_req.items()}
-        self._slot_toks = {mapping[s]: t for s, t in self._slot_toks.items()}
-        self._slot_t0 = {mapping[s]: t for s, t in self._slot_t0.items()}
-        self.stats.defrags += 1
+        if self.pool.live_count and \
+                self.pool.fragmentation() >= self.defrag_threshold:
+            cache, perm, mapping = self.pool.defrag(self.state.cache)
+            take = lambda a: self.pool.take_rows(a, perm)
+            self.state = self.state._replace(
+                cache=cache, lengths=take(self.state.lengths),
+                last_tok=take(self.state.last_tok),
+                n_out=take(self.state.n_out),
+                done=take(self.state.done),
+                eos_hit=take(self.state.eos_hit))
+            hperm = np.asarray(perm)
+            self._prompt_buf = self._prompt_buf[hperm]
+            self._prompt_len = self._prompt_len[hperm]
+            self._len_host = self._len_host[hperm]
+            self._max_new = self._max_new[hperm]
+            self._active = self._active[hperm]
+            self._temp = self._temp[hperm]
+            self._top_p = self._top_p[hperm]
+            self._top_k = self._top_k[hperm]
+            self._slot_req = {mapping[s]: r
+                              for s, r in self._slot_req.items()}
+            self._slot_toks = {mapping[s]: t
+                               for s, t in self._slot_toks.items()}
+            self._slot_t0 = {mapping[s]: t
+                             for s, t in self._slot_t0.items()}
+            self._slot_prompt = {mapping[s]: p
+                                 for s, p in self._slot_prompt.items()}
+            self.stats.defrags += 1
+        if self.paged and \
+                self.pool.page_fragmentation() >= self.defrag_threshold:
+            # pure page permutation: slot contents (and the emission-count
+            # PRNG stream) are unchanged, so defrag stays invisible to tokens
+            self.state = self.state._replace(
+                cache=self.pool.defrag_pages(self.state.cache))
+            self.stats.page_defrags += 1
 
     # ---------------------------------------------------------------- step
     def stream_step(self, now: Optional[float] = None
@@ -226,14 +287,22 @@ class Engine:
                             top_p=jnp.asarray(self._top_p),
                             top_k=jnp.asarray(self._top_k),
                             key=jnp.asarray(self.pool.slot_keys))
+        page_table = None
+        if self.paged:
+            # pre-reserve pages for every position this block can write, so
+            # the table is constant across the k in-scan steps
+            for slot in self._slot_req:
+                self.pool.reserve(slot, int(self._len_host[slot]) + self.k)
+            page_table = jnp.asarray(self.pool.tables)
         self.state, toks, emitted = self._block(
             self.params, self.state, jnp.asarray(self._prompt_buf),
             jnp.asarray(self._prompt_len), jnp.asarray(self._max_new),
-            jnp.asarray(self._active), samp)
+            jnp.asarray(self._active), samp, page_table)
         # the round's single host sync: k tokens + per-slot masks
         toks = np.asarray(toks)
         emitted = np.asarray(emitted)
         done = np.asarray(self.state.done)
+        eos_hit = np.asarray(self.state.eos_hit)
         len_after = np.asarray(self.state.lengths)
         self._len_host = len_after.copy()   # writable host mirror
         self.stats.syncs += 1
@@ -243,6 +312,12 @@ class Engine:
         self.stats.prefill_tokens += int(
             (np.minimum(len_after, plen) - np.minimum(len_before, plen))
             [self._active].sum())
+        if self.prefix_on:
+            # publish fully written whole-prompt pages to the trie *before*
+            # the retire loop releases this round's finished slots
+            for slot in self._slot_req:
+                self.pool.register_prefix(slot, self._slot_prompt[slot],
+                                          int(len_after[slot]))
         end = self.scheduler.clock()   # same clock as admission timestamps
         for slot in list(self._slot_req):
             got = [int(t) for t in toks[:, slot][emitted[:, slot]]]
@@ -256,9 +331,11 @@ class Engine:
             r = self._slot_req.pop(slot)
             seq = self._slot_toks.pop(slot)
             t0 = self._slot_t0.pop(slot)
-            reason = FINISH_EOS if (self.eos_id is not None and seq
-                                    and seq[-1] == self.eos_id) \
-                else FINISH_LENGTH
+            self._slot_prompt.pop(slot, None)
+            # reason comes from the device-side done branch: a max_new/
+            # cache-full retirement whose last draw happens to equal eos_id
+            # is still a length finish
+            reason = FINISH_EOS if bool(eos_hit[slot]) else FINISH_LENGTH
             resp = Response(id=r.id, tokens=seq, finish_reason=reason,
                             prompt_len=len(r.prompt),
                             queue_wait_s=t0 - r.arrival_s,
@@ -285,6 +362,9 @@ class Engine:
         return self.stream_step(now)[1]
 
     # ----------------------------------------------------------------- run
+    def _drained(self) -> bool:
+        return not len(self.scheduler) and self.pool.live_count == 0
+
     def run(self, requests: Iterable[Request] = (), *,
             max_syncs: int = 1_000_000) -> List[Response]:
         """Drain: submit ``requests``, then step until queue and slots empty."""
@@ -292,9 +372,13 @@ class Engine:
             self.submit(r)
         out: List[Response] = []
         for _ in range(max_syncs):
-            if not len(self.scheduler) and self.pool.live_count == 0:
+            if self._drained():
                 return out
             out.extend(self.step())
+        # re-check after the final step: a workload that drains in exactly
+        # max_syncs rounds is a success, not a timeout
+        if self._drained():
+            return out
         raise RuntimeError(f"engine did not drain within {max_syncs} syncs")
 
     def stream(self, requests: Iterable[Request] = (), *,
@@ -306,8 +390,10 @@ class Engine:
         for r in requests:
             self.submit(r)
         for _ in range(max_syncs):
-            if not len(self.scheduler) and self.pool.live_count == 0:
+            if self._drained():
                 return
             deltas, _ = self.stream_step()
             yield from deltas
+        if self._drained():
+            return
         raise RuntimeError(f"engine did not drain within {max_syncs} syncs")

@@ -2,14 +2,17 @@
 shedding.
 
 Under normal load the scheduler is plain FIFO: longest-waiting requests take
-free slots first. Under *overload* (queue deeper than the free slots) it
-reuses ``repro.dist.DeadlineGate`` — the straggler-quorum gate from the
-CA-k collective path — as a load-shedding policy: each queued request's wait
+free slots first. When a gate is configured it reuses
+``repro.dist.DeadlineGate`` — the straggler-quorum gate from the CA-k
+collective path — as a load-shedding policy: each queued request's wait
 time plays the role of a worker's arrival time at a sync point. Requests
 whose wait already exceeds ``deadline_s`` have blown their latency budget;
 serving them spends slots on responses the client has likely abandoned, so
 the gate drops them (``finish_reason="shed"``) — but never more than a
 ``1 - quorum`` fraction of the queue, exactly the gate's quorum guarantee.
+The gate is consulted on every non-empty round, not just under overload: an
+expired request wastes a slot whether or not the queue outnumbers the free
+slots.
 This closes the ROADMAP item of wiring ``DeadlineGate`` into the CA-k path:
 the k-step decode block is the collective, admission is its gate.
 """
@@ -48,13 +51,15 @@ class Scheduler:
                  now: Optional[float] = None
                  ) -> Tuple[List[Request], List[Request]]:
         """-> (admit, shed). ``admit`` fits in ``free_slots``; ``shed`` are
-        expired requests dropped under overload (empty without a gate)."""
+        expired requests dropped by the gate (empty without a gate). The
+        gate runs whenever the queue is non-empty — light load included —
+        so an abandoned request never spends a slot."""
         if not self._q:
             return [], []
         now = self.clock() if now is None else now
         cand = list(self._q)
         shed: List[Request] = []
-        if self.gate is not None and len(cand) > free_slots:
+        if self.gate is not None:
             waits = [now - r.arrival_s for r in cand]
             kept_idx, _ = self.gate.admit(waits)
             kept = set(kept_idx)

@@ -201,6 +201,10 @@ def test_scheduler_gate_sheds_expired_under_overload():
 
 
 def test_scheduler_fifo_when_not_overloaded():
+    """The gate now runs on every non-empty round (not just when the queue
+    exceeds free slots), but its quorum floor still guarantees FIFO admission
+    when every queued request is equally stale: shedding both would drop
+    below quorum, so both are kept."""
     sch = Scheduler(gate=DeadlineGate(deadline_s=0.01, quorum=0.5),
                     clock=lambda: 100.0)
     for i in range(2):
