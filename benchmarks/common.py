@@ -5,6 +5,8 @@ import time
 
 import jax
 
+from repro import obs
+
 #: records captured by every emit() since process start; benchmarks.run
 #: serializes these with --json for a machine-readable perf trajectory
 RECORDS: list = []
@@ -30,8 +32,20 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
     return ts[len(ts) // 2]
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", metrics=None):
+    """Print one ``name,us_per_call,derived`` CSV row and capture it.
+
+    ``metrics``: optional ``{str: number}`` dict embedded in the captured
+    record (suite-specific counters — sync counts, hit rates). When
+    :mod:`repro.obs` is enabled, the record additionally carries the
+    cumulative obs metric snapshot under ``"obs"``.
+    """
     print(f"{name},{us_per_call:.2f},{derived}")
-    RECORDS.append(dict(suite=_SUITE, name=name,
-                        us_per_call=round(float(us_per_call), 2),
-                        derived=derived))
+    rec = dict(suite=_SUITE, name=name,
+               us_per_call=round(float(us_per_call), 2),
+               derived=derived)
+    if metrics:
+        rec["metrics"] = {k: float(v) for k, v in metrics.items()}
+    if obs.enabled():
+        rec["obs"] = obs.metrics_snapshot()
+    RECORDS.append(rec)

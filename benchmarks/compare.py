@@ -1,0 +1,96 @@
+"""Diff a fresh benchmark JSON against a baseline and gate on regressions.
+
+  PYTHONPATH=src python -m benchmarks.compare FRESH.json BASELINE.json \
+      [--threshold 0.15]
+
+Both inputs are record lists as written by ``benchmarks.run --json`` /
+``--bench-dir`` (``[{suite, name, us_per_call, derived}, ...]``). Rows are
+matched by ``(suite, name)``; for each match the ratio
+``fresh.us_per_call / baseline.us_per_call`` is reported, and the process
+exits nonzero when any ratio exceeds ``1 + threshold`` (default: a >15%
+slowdown) or when the fresh run carries error-sentinel rows
+(``us_per_call < 0``, see ``benchmarks.run.ERROR_SENTINEL``).
+
+Rows present only on one side are reported but do not gate: benchmark sets
+grow PR over PR, and a missing baseline row just means the row is new.
+Sentinel rows in the *baseline* are treated as absent (the baseline run died
+there; nothing honest to compare against).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+Key = Tuple[str, str]
+
+
+def _load(path: str) -> Dict[Key, dict]:
+    with open(path) as f:
+        records = json.load(f)
+    out: Dict[Key, dict] = {}
+    for r in records:
+        out[(r.get("suite", ""), r["name"])] = r
+    return out
+
+
+def compare(fresh: Dict[Key, dict], base: Dict[Key, dict],
+            threshold: float) -> Tuple[List[str], List[str]]:
+    """-> (report lines, failure lines). Failures: regressions past the
+    threshold and fresh-side error sentinels."""
+    lines: List[str] = []
+    failures: List[str] = []
+    for key in sorted(fresh):
+        suite, name = key
+        f_us = float(fresh[key]["us_per_call"])
+        if f_us < 0:
+            failures.append(f"ERROR sentinel in fresh run: {name} "
+                            f"({fresh[key].get('derived', '')})")
+            continue
+        b = base.get(key)
+        if b is None or float(b["us_per_call"]) < 0:
+            lines.append(f"  new       {name}: {f_us:.2f} us")
+            continue
+        b_us = float(b["us_per_call"])
+        ratio = f_us / b_us if b_us > 0 else float("inf")
+        tag = "ok"
+        if ratio > 1.0 + threshold:
+            tag = "REGRESSED"
+            failures.append(f"{name}: {b_us:.2f} -> {f_us:.2f} us "
+                            f"({ratio:.2f}x, threshold {1 + threshold:.2f}x)")
+        elif ratio < 1.0 - threshold:
+            tag = "improved"
+        lines.append(f"  {tag:<9} {name}: {b_us:.2f} -> {f_us:.2f} us "
+                     f"({ratio:.2f}x)")
+    for key in sorted(set(base) - set(fresh)):
+        lines.append(f"  missing   {key[1]}: in baseline only")
+    return lines, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="fresh benchmark JSON (the run under test)")
+    ap.add_argument("baseline", help="baseline benchmark JSON to diff against")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="fail when us_per_call grows by more than this "
+                         "fraction (default 0.15 = 15%%)")
+    args = ap.parse_args(argv)
+    fresh = _load(args.fresh)
+    base = _load(args.baseline)
+    lines, failures = compare(fresh, base, args.threshold)
+    print(f"# {len(fresh)} fresh rows vs {len(base)} baseline rows "
+          f"(threshold {args.threshold:.0%})")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"# {len(failures)} FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"#   {f}", file=sys.stderr)
+        return 1
+    print("# no regressions past threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,6 +26,14 @@ slots) with the radix prefix cache off and on: the on-run must emit
 bit-identical tokens while consuming at most half the prefill tokens, with
 the CA-k invariant (steps == syncs * k) intact on both runs. Rows record
 prefill tokens and mean resident requests per sync.
+
+Observability gates (``repro.obs``): every compile drain runs under
+``obs.sync_audit()`` and asserts the audited host round-trip epochs equal
+``EngineStats.syncs`` bitwise — the engine's bookkeeping checked against
+interception at the jax/numpy boundary, for every (k, slots, mode) cell.
+The final ``serve-obs/disabled_overhead`` row times the per-round
+instrumentation bundle with obs disabled and asserts it costs < 1% of a
+real k=1 sync.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro import obs
 from repro.configs import get_arch, smoke_config
 from repro.models import init_params
 from repro.serve import Engine, Request, SamplingParams
@@ -57,7 +66,15 @@ def _requests(cfg, n, seed=0, sampling=None):
 def _timed_drain(cfg, params, slots, k, sampling, page_size=None):
     eng = Engine(params, cfg, num_slots=slots, max_len=NEW_TOKENS + 8,
                  k=k, max_prompt=4, page_size=page_size)
-    eng.run(_requests(cfg, slots, sampling=sampling))  # untimed: jit compile
+    # untimed compile drain, under the jax-boundary sync auditor: the
+    # engine's own sync counter must agree bitwise with the audited number
+    # of host round-trip epochs — EngineStats.syncs is bookkeeping, the
+    # audit is ground truth measured at the intercepted jax/numpy reads
+    with obs.sync_audit() as audit:
+        eng.run(_requests(cfg, slots, sampling=sampling))
+    assert audit.syncs == eng.stats.syncs, \
+        f"k={k}: audited sync epochs {audit.syncs} != " \
+        f"EngineStats.syncs {eng.stats.syncs} (audit: {audit.as_dict()})"
     base_steps, base_syncs = eng.stats.steps, eng.stats.syncs
     reqs = _requests(cfg, slots, seed=1, sampling=sampling)
     t0 = time.perf_counter()
@@ -121,13 +138,49 @@ def _prefix_sweep(cfg, params, slots=4, k=4):
              f"prefix_tokens={s.prefix_tokens};cow_copies={s.cow_copies}")
 
 
+def _disabled_overhead_guard(us_per_sync: float, iters: int = 20_000):
+    """The acceptance gate on zero-overhead-when-disabled: time the full
+    per-round instrumentation bundle the engine executes with obs off (one
+    ``mark_dispatch``, two no-op spans, the counter/histogram mutations and
+    ``enabled()`` checks) and assert it costs < 1% of a real k=1 sync."""
+    assert not obs.enabled(), "guard must run with obs disabled"
+    c = obs.counter("repro_serve_syncs_total")
+    h = obs.histogram("repro_serve_ttft_seconds")
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        obs.mark_dispatch("serve.decode_block")
+        with obs.span("serve.admit"):
+            pass
+        with obs.span("serve.decode_block", k=1, live=4):
+            pass
+        c.inc()
+        c.inc(4)
+        c.inc()
+        c.inc()
+        c.inc()
+        h.observe(0.01)
+        h.observe(0.001)
+        obs.enabled()
+        obs.enabled()
+    bundle_us = (time.perf_counter() - t0) / iters * 1e6
+    frac = bundle_us / us_per_sync
+    assert frac < 0.01, \
+        f"disabled-obs instrumentation costs {bundle_us:.3f} us/round = " \
+        f"{frac:.2%} of a {us_per_sync:.0f} us k=1 sync (budget 1%)"
+    emit("serve-obs/disabled_overhead", bundle_us,
+         f"frac_of_k1_sync={frac:.5f};us_per_sync={us_per_sync:.0f}")
+
+
 def run():
     cfg = smoke_config(get_arch(ARCH))
     params = init_params(cfg, jax.random.PRNGKey(0))
+    us_per_sync_k1 = None
     for slots in (4, 16):
         for k in (1, 4, 16):
             dt, steps, syncs, toks, seqs = _timed_drain(cfg, params, slots,
                                                         k, None)
+            if k == 1 and us_per_sync_k1 is None:
+                us_per_sync_k1 = dt / syncs * 1e6
             emit(f"serve/{cfg.name}/k={k},slots={slots}", dt / steps * 1e6,
                  f"tok_per_s={toks / dt:.0f};ms_per_step={dt / steps * 1e3:.3f}")
             sdt, ssteps, ssyncs, stoks, _ = _timed_drain(cfg, params, slots,
@@ -154,6 +207,7 @@ def run():
                  f"tok_per_s={ptoks / pdt:.0f};"
                  f"ms_per_step={pdt / psteps * 1e3:.3f};syncs={psyncs}")
     _prefix_sweep(cfg, params)
+    _disabled_overhead_guard(us_per_sync_k1)
 
 
 if __name__ == "__main__":

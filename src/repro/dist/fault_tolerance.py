@@ -13,12 +13,22 @@ are budgeted; blowing the budget is an error, not a hang.
 from __future__ import annotations
 
 import math
+import time
 from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 
+from repro import obs
 from repro.checkpoint import Checkpointer
 from repro.dist.elastic import remesh
+
+_M_STEP_S = obs.histogram("repro_train_step_seconds",
+                          "wall time per training step (dispatch + host "
+                          "metric fetch)")
+_M_CKPT = obs.counter("repro_train_ckpt_saves_total",
+                      "checkpoint snapshots initiated")
+_M_RESTARTS = obs.counter("repro_train_restarts_total",
+                          "restore-and-resume cycles after node failures")
 
 
 class NodeFailure(RuntimeError):
@@ -145,8 +155,12 @@ class TrainingRunner:
                 self.ckpt.wait()  # let an in-flight snapshot commit
                 if self.elastic and self.mesh is not None:
                     self.mesh = remesh(self.mesh)
-                self._build()
-                state, start = self._init_or_restore()
+                with obs.span("train.restore", restart=self.restarts):
+                    self._build()
+                    state, start = self._init_or_restore()
+                _M_RESTARTS.inc()
+                obs.instant("train.restart", restart=self.restarts,
+                            resume_step=start)
                 # drop stale post-restore entries so re-executed steps appear
                 # once: the log reads as one uninterrupted trajectory
                 self.metrics_log = [m for m in self.metrics_log
@@ -154,18 +168,26 @@ class TrainingRunner:
 
     def _loop(self, state, start: int, total_steps: int):
         data = self.data_factory(start)
+        timed = obs.enabled()
         for step in range(start, total_steps):
             if step % self.ckpt_every == 0:
                 # snapshot BEFORE the step: manifest step == first step to
                 # re-execute on restore (async; host fetch is synchronous so
                 # donation by the jitted step below is safe)
-                self.ckpt.save(step, state)
+                with obs.span("train.ckpt_save", step=step):
+                    self.ckpt.save(step, state)
+                _M_CKPT.inc()
             if self.failure_source is not None:
                 self.failure_source.maybe_fail(step)
             batch = next(data)
-            state, metrics = self._step(state, batch)
-            rec = {"step": step}
-            for k, v in metrics.items():
-                rec[k] = float(v)
+            t0 = time.perf_counter() if timed else 0.0
+            obs.mark_dispatch("train.step")
+            with obs.span("train.step", step=step):
+                state, metrics = self._step(state, batch)
+                rec = {"step": step}
+                for k, v in metrics.items():
+                    rec[k] = float(v)     # host sync: metric fetch
+            if timed:
+                _M_STEP_S.observe(time.perf_counter() - t0)
             self.metrics_log.append(rec)
         return state

@@ -44,7 +44,13 @@ kwargs always win.
 Cache file format — one entry per (op, backend, shape, device kind)::
 
     {"gram|pallas|54x5810|cpu": {"params": {"bd": 64, "bm": 512},
-                                 "us": 812.4}}
+                                 "us": 812.4, "schema_version": 2,
+                                 "device": "cpu"}}
+
+Entries carry ``schema_version`` (see :data:`SCHEMA_VERSION`) and the device
+kind they were tuned on; dispatch skips entries from another schema version
+(reported as ``stale`` lookups, distinguishable from genuine misses) rather
+than feeding an old schema's params to a new impl.
 
 Backward block sizes are tunables of their own: ``autotune(op, shapes,
 grad=True)`` times a ``jax.grad`` through the dispatch and persists winners
@@ -69,6 +75,20 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
+
+#: dispatch observability (zero-cost while repro.obs is disabled): dispatches
+#: by op x backend, the silent xla fallbacks the policy docs promise, and
+#: autotune cache lookup outcomes (hit / miss / stale schema)
+_M_DISPATCH = obs.counter("repro_kernel_dispatch_total",
+                          "kernel dispatches by op and backend")
+_M_FALLBACK = obs.counter("repro_kernel_fallback_total",
+                          "silent fallbacks to xla by op and requested "
+                          "backend")
+_M_TUNE_LOOKUP = obs.counter("repro_autotune_lookup_total",
+                             "autotune cache lookups by outcome "
+                             "(hit/miss/stale)")
 
 #: canonical backend names, in "auto" preference order on TPU
 BACKENDS = ("pallas", "xla")
@@ -368,6 +388,7 @@ def select(name: str, *args: Any, **kwargs: Any) -> Impl:
         return impl
     fallback = op.impls.get("xla")
     if backend != "xla" and _usable(fallback, args, kwargs):
+        _M_FALLBACK.inc(op=name, requested=backend)
         return fallback
     raise NotImplementedError(
         f"op {name!r}: no usable implementation (policy={policy()!r}, "
@@ -382,6 +403,7 @@ def dispatch(name: str, *args: Any, **kwargs: Any) -> Any:
     """
     op = get_op(name)
     impl = select(name, *args, **kwargs)
+    _M_DISPATCH.inc(op=name, backend=impl.backend)
     if op.shape_of is not None:
         for tunables, suffix in ((impl.tunables, ""),
                                  (impl.bwd_tunables, BWD_KEY_SUFFIX)):
@@ -408,6 +430,15 @@ BWD_KEY_SUFFIX = "+bwd"
 #: device-kind placeholder while the backend is uninitialized; entries keyed
 #: by it are process-local only (never persisted)
 UNKNOWN_DEVICE = "unknown"
+#: entry schema version. Bumped when the meaning of ``params`` changes for
+#: any op (e.g. a renamed tunable); entries written under another version
+#: are *stale*, not misses — dispatch skips them instead of feeding an old
+#: schema's params to a new impl, and the lookup counter reports them as
+#: ``outcome="stale"`` so a cache wiped by a schema bump is distinguishable
+#: from one that was never tuned. Version 2 added the ``schema_version`` and
+#: ``device`` fields themselves, so v1 entries are exactly the field-less
+#: legacy ones.
+SCHEMA_VERSION = 2
 
 
 def cache_path() -> str:
@@ -473,7 +504,17 @@ def _tuned_entry(op: Op, impl: Impl, args, kwargs,
         shape = tuple(op.shape_of(*args, **kwargs))
     except Exception:
         return None
-    return table.get(_cache_key(op.name + suffix, impl.backend, shape))
+    entry = table.get(_cache_key(op.name + suffix, impl.backend, shape))
+    if entry is None:
+        _M_TUNE_LOOKUP.inc(op=op.name, outcome="miss")
+        return None
+    if entry.get("schema_version") != SCHEMA_VERSION:
+        # written under another schema: its params may not mean what this
+        # impl's tunables mean, so skip it — but report "stale", not "miss"
+        _M_TUNE_LOOKUP.inc(op=op.name, outcome="stale")
+        return None
+    _M_TUNE_LOOKUP.inc(op=op.name, outcome="hit")
+    return entry
 
 
 def _save_cache(path: str, fresh: Dict[str, dict]) -> None:
@@ -586,7 +627,9 @@ def autotune(op_name: str, shapes: Iterable[Sequence[int]], *,
                     best = (t, dict(cand))
             if best is not None:
                 key = _cache_key(key_op, bname, key_shape)
-                entry = dict(params=best[1], us=round(best[0] * 1e6, 2))
+                entry = dict(params=best[1], us=round(best[0] * 1e6, 2),
+                             schema_version=SCHEMA_VERSION,
+                             device=_device_kind())
                 _tuned()[key] = entry
                 results[key] = entry
     if save and any(_is_persistable(k) for k in results):

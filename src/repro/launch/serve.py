@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_config
 from repro.launch.mesh import make_host_mesh
+from repro.launch.obs_cli import add_obs_args, obs_begin, obs_end
 from repro.launch.steps import make_serve_step
 from repro.dist.sharding import make_rules
 from repro.models import init_params, init_cache
@@ -82,6 +83,8 @@ def serve_stream(cfg, engine, reqs, args):
     print(f"stats: syncs={s.syncs} steps={s.steps} tokens_out={s.tokens_out} "
           f"retired={s.retired} shed={s.shed} defrags={s.defrags} "
           f"occupancy={s.occupancy:.2f}")
+    print(s.summary())
+    return engine
 
 
 def serve_engine(cfg, rules, args):
@@ -122,6 +125,7 @@ def serve_engine(cfg, rules, args):
     print(f"stats: syncs={s.syncs} steps={s.steps} tokens_out={s.tokens_out} "
           f"prefill_tokens={s.prefill_tokens} retired={s.retired} "
           f"shed={s.shed} defrags={s.defrags} occupancy={s.occupancy:.2f}")
+    print(s.summary())
     if engine.paged:
         print(f"paged: page_size={engine.pool.page_size} "
               f"pages={engine.pool.num_pages} "
@@ -204,14 +208,19 @@ def main(argv=None):
                     help="engine mode, with --page-size: reuse radix-trie "
                          "shared prompt-prefix pages across requests and "
                          "skip their prefill steps")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
     cfg = smoke_config(arch) if args.preset == "tiny" else arch
     rules = make_rules(make_host_mesh())
-    if args.engine == "on":
-        return serve_engine(cfg, rules, args)
-    return serve_classic(cfg, rules, args)
+    observing = obs_begin(args)
+    try:
+        if args.engine == "on":
+            return serve_engine(cfg, rules, args)
+        return serve_classic(cfg, rules, args)
+    finally:
+        obs_end(args, observing)
 
 
 if __name__ == "__main__":

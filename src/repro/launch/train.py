@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, smoke_config
 from repro.launch.mesh import make_host_mesh
+from repro.launch.obs_cli import add_obs_args, obs_begin, obs_end
 from repro.launch.steps import make_train_step, init_train_state, TrainState
 from repro.dist.sharding import make_rules, param_shardings
 from repro.dist.fault_tolerance import TrainingRunner, FailureSource
@@ -50,7 +51,9 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject node failures at these steps (FT demo)")
     ap.add_argument("--log-every", type=int, default=10)
+    add_obs_args(ap)
     args = ap.parse_args(argv)
+    observing = obs_begin(args)
 
     cfg, batch, seq = build(args)
     mesh = make_host_mesh()
@@ -87,7 +90,10 @@ def main(argv=None):
         failure_source=FailureSource(args.fail_at))
 
     t0 = time.time()
-    runner.run(args.steps)
+    try:
+        runner.run(args.steps)
+    finally:
+        obs_end(args, observing)
     dt = time.time() - t0
     for m in runner.metrics_log[::args.log_every]:
         print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "

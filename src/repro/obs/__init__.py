@@ -1,0 +1,48 @@
+"""repro.obs — zero-overhead-when-disabled observability.
+
+Three pillars, one switch:
+
+- ``spans``      — nested wall-clock spans + instant events, thread-safe,
+                   exported as Chrome-trace/Perfetto JSON (``write_trace``).
+- ``metrics``    — labeled counter/gauge/histogram registry, exported as
+                   Prometheus text (``write_prometheus``) or JSONL.
+- ``sync_audit`` — a context manager counting host<->device synchronization
+                   points (blocking reads, coalesced into round-trip epochs
+                   at ``mark_dispatch`` boundaries) — the empirical check of
+                   the paper's CA-k sync-per-k-steps claim.
+
+``enable()`` turns span/metric recording on (the launch CLIs do this from
+``--metrics``/``--trace-out``); while disabled every instrumentation point
+costs one boolean check. ``sync_audit()`` is independent of the switch: the
+context itself opts in, and its jax patches exist only while it is active.
+"""
+from repro.obs.state import enable, disable, enabled
+from repro.obs.spans import (NOOP, span, instant, current, to_chrome_trace,
+                             write_trace)
+from repro.obs import spans as _spans
+from repro.obs import metrics
+from repro.obs.metrics import (REGISTRY, counter, gauge, histogram,
+                               to_prometheus, to_jsonl, write_prometheus,
+                               write_jsonl)
+from repro.obs.sync_audit import SyncAudit, sync_audit, mark_dispatch
+
+
+def metrics_snapshot() -> dict:
+    """Flat ``{name{labels}: value}`` view of every recorded metric."""
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    """Clear collected spans and metric values (handles stay valid)."""
+    _spans.reset()
+    REGISTRY.reset()
+
+
+__all__ = [
+    "enable", "disable", "enabled", "reset",
+    "NOOP", "span", "instant", "current", "to_chrome_trace", "write_trace",
+    "metrics", "REGISTRY", "counter", "gauge", "histogram",
+    "to_prometheus", "to_jsonl", "write_prometheus", "write_jsonl",
+    "metrics_snapshot",
+    "SyncAudit", "sync_audit", "mark_dispatch",
+]

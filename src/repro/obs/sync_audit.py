@@ -1,0 +1,207 @@
+"""Host<->device synchronization audit.
+
+``with sync_audit() as audit:`` counts the host-blocking device reads the
+wrapped host code performs — ``jax.block_until_ready`` / ``jax.device_get``
+calls and ``np.asarray``/``float``/``int``/``bool`` conversions of committed
+``jax.Array`` values — by patching those entry points for the duration of
+the context, plus the jit dispatches instrumented call sites announce via
+:func:`mark_dispatch`. It is the empirical check of the paper's CA-k claim:
+the k-step fused decode must make one host round trip per k steps, and the
+audit measures that at the jax boundary instead of trusting the engine's own
+``EngineStats.syncs`` bookkeeping.
+
+Counting semantics (the paper's alpha-beta cost split):
+
+* ``transfers`` counts every intercepted device read — the *words* side.
+* ``syncs`` counts round-trip *epochs* — the latency (alpha) side, the term
+  CA-k divides by k. Consecutive reads coalesce into one sync until a
+  dispatch boundary (:func:`mark_dispatch`) closes the epoch: once one
+  result of a dispatched computation has been fetched, fetching its siblings
+  costs bandwidth but no extra round trip. Instrumented host loops (the
+  serve engine, the training runner) mark their dispatch sites; the markers
+  are unconditional no-ops outside an active audit.
+* ``dispatches`` counts those announced dispatch boundaries.
+* ``by_span`` attributes each sync to the innermost active
+  :mod:`repro.obs.spans` span at the moment it was counted.
+
+Counting happens at dispatch boundaries only, never inside traced code: a
+read observed while jax is tracing (``jax.core.trace_state_clean()`` is
+False — e.g. constant folding during jit compilation) is ignored, because it
+happens once per compile, not once per execution.
+
+Patches are installed when the first audit enters and removed when the last
+exits — code outside any audit pays nothing. Nested audits each receive all
+events.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.obs import spans
+
+try:                                    # the committed-array class jit returns
+    from jax._src.array import ArrayImpl as _ArrayImpl
+except Exception:                       # pragma: no cover - layout change
+    _ArrayImpl = None
+
+_audits: List["SyncAudit"] = []
+_patch_lock = threading.Lock()
+_saved: dict = {}
+_tls = threading.local()                # .in_read: reentrancy guard
+
+#: (holder, attribute) module-level functions to wrap; each call is one read
+_FN_PATCHES = (("block_until_ready", jax), ("device_get", jax))
+#: ArrayImpl conversion methods that block on device results. NOTE: numpy 2
+#: converts ArrayImpl via the buffer protocol and never calls ``__array__``,
+#: hence the additional ``_NP_PATCHES`` below; these dunders still matter for
+#: ``float(x)``/``int(x)``/``bool(x)`` and explicit ``x.__array__()``.
+_METHOD_PATCHES = ("__array__", "__float__", "__int__", "__bool__")
+#: numpy entry points that pull device arrays to host (counted only when the
+#: first argument is a committed jax array)
+_NP_PATCHES = ("asarray", "array")
+
+
+class SyncAudit:
+    """Counters for one audited region (see module docstring)."""
+
+    def __init__(self):
+        self.syncs = 0              # coalesced round-trip epochs (alpha term)
+        self.transfers = 0          # raw intercepted device reads (beta term)
+        self.dispatches = 0         # mark_dispatch() boundaries
+        self.block_until_ready = 0
+        self.device_get = 0
+        self.by_span: Dict[str, int] = {}
+        self._epoch_open = False
+
+    def _read(self, kind: str) -> None:
+        self.transfers += 1
+        if kind == "block_until_ready":
+            self.block_until_ready += 1
+        elif kind == "device_get":
+            self.device_get += 1
+        if not self._epoch_open:
+            self._epoch_open = True
+            self.syncs += 1
+            name = spans.current()
+            self.by_span[name] = self.by_span.get(name, 0) + 1
+
+    def _dispatch(self) -> None:
+        self.dispatches += 1
+        self._epoch_open = False
+
+    def as_dict(self) -> dict:
+        return dict(syncs=self.syncs, transfers=self.transfers,
+                    dispatches=self.dispatches,
+                    block_until_ready=self.block_until_ready,
+                    device_get=self.device_get, by_span=dict(self.by_span))
+
+
+def _count_read(kind: str) -> None:
+    if not _audits or getattr(_tls, "in_read", False):
+        return
+    if not jax.core.trace_state_clean():
+        return                      # inside a trace: per-compile, not per-run
+    for a in _audits:
+        a._read(kind)
+
+
+def mark_dispatch(site: str = "") -> None:
+    """Announce a host->device dispatch boundary (closes the read epoch).
+
+    Instrumented host loops call this immediately before dispatching a
+    jitted computation whose results they will fetch. No-op (one truthiness
+    check) when no audit is active.
+    """
+    if not _audits:
+        return
+    for a in _audits:
+        a._dispatch()
+
+
+@contextlib.contextmanager
+def _reentrancy_guard():
+    prev = getattr(_tls, "in_read", False)
+    _tls.in_read = True
+    try:
+        yield
+    finally:
+        _tls.in_read = prev
+
+
+def _wrap_fn(orig, kind):
+    def wrapper(*args, **kwargs):
+        _count_read(kind)
+        with _reentrancy_guard():   # device_get re-enters __array__ per leaf
+            return orig(*args, **kwargs)
+    wrapper.__wrapped__ = orig
+    return wrapper
+
+
+def _wrap_method(orig, kind):
+    def wrapper(self, *args, **kwargs):
+        _count_read(kind)
+        with _reentrancy_guard():
+            return orig(self, *args, **kwargs)
+    wrapper.__wrapped__ = orig
+    return wrapper
+
+
+def _wrap_np(orig):
+    """Wrap a numpy conversion entry point: count iff converting a device
+    array (numpy 2 reads those through the buffer protocol, bypassing any
+    ``__array__`` patch, so interception must happen at the numpy call)."""
+    def wrapper(a, *args, **kwargs):
+        if (_ArrayImpl is not None and isinstance(a, _ArrayImpl)
+                and not getattr(_tls, "in_read", False)):
+            _count_read("convert")
+            with _reentrancy_guard():
+                return orig(a, *args, **kwargs)
+        return orig(a, *args, **kwargs)
+    wrapper.__wrapped__ = orig
+    return wrapper
+
+
+def _install() -> None:
+    for name, holder in _FN_PATCHES:
+        orig = getattr(holder, name)
+        _saved[(id(holder), name)] = (holder, orig)
+        setattr(holder, name, _wrap_fn(orig, name))
+    for name in _NP_PATCHES:
+        orig = getattr(np, name)
+        _saved[(id(np), name)] = (np, orig)
+        setattr(np, name, _wrap_np(orig))
+    if _ArrayImpl is not None:
+        for name in _METHOD_PATCHES:
+            orig = getattr(_ArrayImpl, name, None)
+            if orig is None:
+                continue
+            _saved[(id(_ArrayImpl), name)] = (_ArrayImpl, orig)
+            setattr(_ArrayImpl, name, _wrap_method(orig, "convert"))
+
+
+def _uninstall() -> None:
+    for (holder, orig), key in [(v, k) for k, v in _saved.items()]:
+        setattr(holder, key[1], orig)
+    _saved.clear()
+
+
+@contextlib.contextmanager
+def sync_audit():
+    """Audit host<->device syncs in the wrapped region (see module doc)."""
+    audit = SyncAudit()
+    with _patch_lock:
+        if not _audits:
+            _install()
+        _audits.append(audit)
+    try:
+        yield audit
+    finally:
+        with _patch_lock:
+            _audits.remove(audit)
+            if not _audits:
+                _uninstall()

@@ -85,3 +85,28 @@ class EngineStats:
     @property
     def occupancy(self) -> float:
         return self.occupancy_sum / self.syncs if self.syncs else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admissions that matched the prefix trie."""
+        return self.prefix_hits / self.admitted if self.admitted else 0.0
+
+    @property
+    def tokens_per_sync(self) -> float:
+        """Delivered tokens per host round trip — the serving-side realization
+        of the paper's per-sync work amplification (ideal: k at saturation)."""
+        return self.tokens_out / self.syncs if self.syncs else 0.0
+
+    def summary(self) -> str:
+        """One-line human summary (the launch CLIs print this at exit)."""
+        s = (f"summary: syncs={self.syncs} steps={self.steps} "
+             f"tokens_out={self.tokens_out} "
+             f"tokens_per_sync={self.tokens_per_sync:.2f} "
+             f"admitted={self.admitted} retired={self.retired} "
+             f"shed={self.shed} rejected={self.rejected} "
+             f"occupancy={self.occupancy:.2f}")
+        if self.prefix_hits or self.cow_copies or self.page_defrags:
+            s += (f" prefix_hit_rate={self.prefix_hit_rate:.2f} "
+                  f"prefix_tokens={self.prefix_tokens} "
+                  f"cow_copies={self.cow_copies}")
+        return s

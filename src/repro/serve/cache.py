@@ -118,10 +118,18 @@ class CachePool:
     def seed_slot(self, slot: int, seed: int) -> None:
         """Bind a slot's PRNG key to a request seed (sampled decode). The
         key is per-request: it survives defrag along with the cache rows and
-        is zeroed when the slot is freed."""
+        is zeroed when the slot is freed.
+
+        The key data is built on host — the threefry2x32 layout of
+        ``jax.random.PRNGKey``, [seed >> 32, seed & 0xffffffff] — rather
+        than materializing a device PRNGKey and fetching it back: seeding
+        happens at admission, and a device round trip there would be an
+        uncounted host sync per sampled request (the ``obs.sync_audit``
+        boundary check caught exactly that)."""
         if slot not in self._owner:
             raise SlotError(f"slot {slot} is not allocated")
-        self._keys[slot] = np.asarray(jax.random.PRNGKey(seed), np.uint32)
+        self._keys[slot] = np.array([seed >> 32, seed & 0xFFFFFFFF],
+                                    np.uint32)
 
     @property
     def slot_keys(self) -> np.ndarray:

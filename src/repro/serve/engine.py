@@ -28,6 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import init_cache
 from repro.models.transformer import prefill_audio_cache
 from repro.serve.api import (Request, Response, EngineStats, StreamDelta,
@@ -38,6 +39,37 @@ from repro.serve.paging import PagedCachePool
 from repro.serve.decode import init_decode_state, make_decode_block
 from repro.serve.sampling import GREEDY, SlotSampling
 from repro.serve.scheduler import Scheduler
+
+# ---------------------------------------------------------------------------
+# observability handles (module-level: get-or-create once, mutate per round;
+# every mutation is a no-op boolean check while repro.obs is disabled)
+# ---------------------------------------------------------------------------
+_M_SYNCS = obs.counter("repro_serve_syncs_total",
+                       "host<->device round trips (one per fused k-block)")
+_M_STEPS = obs.counter("repro_serve_steps_total",
+                       "model decode steps (= syncs * k)")
+_M_TOKENS = obs.counter("repro_serve_tokens_total",
+                        "tokens delivered to responses")
+_M_PREFILL = obs.counter("repro_serve_prefill_tokens_total",
+                         "prompt tokens consumed in-loop")
+_M_REQS = obs.counter("repro_serve_requests_total",
+                      "completed requests by finish reason")
+_M_PREFIX_HITS = obs.counter("repro_serve_prefix_hits_total",
+                             "admissions that matched the prefix trie")
+_M_PREFIX_TOKENS = obs.counter("repro_serve_prefix_tokens_total",
+                               "prefill tokens skipped via prefix reuse")
+_M_COW = obs.counter("repro_serve_cow_copies_total",
+                     "copy-on-write page divergences")
+_M_DEFRAGS = obs.counter("repro_serve_defrags_total",
+                         "cache compactions by kind (slot/page)")
+_M_TTFT = obs.histogram("repro_serve_ttft_seconds",
+                        "submit -> first generated token")
+_M_TPOT = obs.histogram("repro_serve_tpot_seconds",
+                        "mean per-token latency after the first token")
+_M_QWAIT = obs.histogram("repro_serve_queue_wait_seconds",
+                         "submit -> slot assignment")
+_M_LATENCY = obs.histogram("repro_serve_latency_seconds",
+                           "submit -> retirement")
 
 
 class Engine:
@@ -116,6 +148,7 @@ class Engine:
         self._slot_toks: dict = {}
         self._slot_t0: dict = {}
         self._slot_prompt: dict = {}    # int token lists for the prefix trie
+        self._slot_first: dict = {}     # first-token wall time (TTFT metric)
         self.stats = EngineStats()
         if cfg.family == "audio":
             row = lambda p, enc: prefill_audio_cache(
@@ -153,6 +186,7 @@ class Engine:
                                 prompt_len=len(r.prompt), queue_wait_s=wait,
                                 latency_s=wait))
             self.stats.shed += 1
+            _M_REQS.inc(reason=FINISH_SHED)
         st = self.state
         slots: List[int] = []
         init_lens: List[int] = []
@@ -168,6 +202,7 @@ class Engine:
                     id=r.id, tokens=[], finish_reason=FINISH_ERROR,
                     prompt_len=n, queue_wait_s=wait, latency_s=wait))
                 self.stats.rejected += 1
+                _M_REQS.inc(reason=FINISH_ERROR)
                 continue
             slot = self.pool.allocate(r.id)
             slots.append(slot)
@@ -189,9 +224,12 @@ class Engine:
                     st = st._replace(
                         cache=self.pool.copy_page(st.cache, *cow))
                     self.stats.cow_copies += 1
+                    _M_COW.inc()
                 if m:
                     self.stats.prefix_hits += 1
                     self.stats.prefix_tokens += m
+                    _M_PREFIX_HITS.inc()
+                    _M_PREFIX_TOKENS.inc(m)
             self._prompt_buf[slot, :] = 0
             self._prompt_buf[slot, :n] = np.asarray(r.prompt, np.int32)
             self._prompt_len[slot] = n
@@ -212,6 +250,10 @@ class Engine:
             self._slot_toks[slot] = []
             self._slot_t0[slot] = now
             self.stats.admitted += 1
+            if obs.enabled():
+                _M_QWAIT.observe(now - r.arrival_s)
+                obs.instant("serve.admit", id=r.id, slot=slot,
+                            prompt_len=n, prefix_reused=m)
         if slots:
             idx = jnp.asarray(slots, jnp.int32)
             z = jnp.zeros((len(slots),), jnp.int32)
@@ -254,7 +296,10 @@ class Engine:
                              for s, t in self._slot_t0.items()}
             self._slot_prompt = {mapping[s]: p
                                  for s, p in self._slot_prompt.items()}
+            self._slot_first = {mapping[s]: t
+                                for s, t in self._slot_first.items()}
             self.stats.defrags += 1
+            _M_DEFRAGS.inc(kind="slot")
         if self.paged and \
                 self.pool.page_fragmentation() >= self.defrag_threshold:
             # pure page permutation: slot contents (and the emission-count
@@ -262,6 +307,7 @@ class Engine:
             self.state = self.state._replace(
                 cache=self.pool.defrag_pages(self.state.cache))
             self.stats.page_defrags += 1
+            _M_DEFRAGS.inc(kind="page")
 
     # ---------------------------------------------------------------- step
     def stream_step(self, now: Optional[float] = None
@@ -275,7 +321,8 @@ class Engine:
         instead of waiting for retirement.
         """
         now = self.scheduler.clock() if now is None else now
-        out = self._admit(now)
+        with obs.span("serve.admit"):
+            out = self._admit(now)
         # shed / rejected requests never held a slot: terminal delta only
         deltas = [StreamDelta(id=r.id, tokens=[], done=True, response=r)
                   for r in out]
@@ -294,24 +341,31 @@ class Engine:
             for slot in self._slot_req:
                 self.pool.reserve(slot, int(self._len_host[slot]) + self.k)
             page_table = jnp.asarray(self.pool.tables)
-        self.state, toks, emitted = self._block(
-            self.params, self.state, jnp.asarray(self._prompt_buf),
-            jnp.asarray(self._prompt_len), jnp.asarray(self._max_new),
-            jnp.asarray(self._active), samp, page_table)
-        # the round's single host sync: k tokens + per-slot masks
-        toks = np.asarray(toks)
-        emitted = np.asarray(emitted)
-        done = np.asarray(self.state.done)
-        eos_hit = np.asarray(self.state.eos_hit)
-        len_after = np.asarray(self.state.lengths)
+        obs.mark_dispatch("serve.decode_block")
+        with obs.span("serve.decode_block", k=self.k, live=live):
+            self.state, toks, emitted = self._block(
+                self.params, self.state, jnp.asarray(self._prompt_buf),
+                jnp.asarray(self._prompt_len), jnp.asarray(self._max_new),
+                jnp.asarray(self._active), samp, page_table)
+            # the round's single host sync: k tokens + per-slot masks
+            toks = np.asarray(toks)
+            emitted = np.asarray(emitted)
+            done = np.asarray(self.state.done)
+            eos_hit = np.asarray(self.state.eos_hit)
+            len_after = np.asarray(self.state.lengths)
         self._len_host = len_after.copy()   # writable host mirror
         self.stats.syncs += 1
         self.stats.steps += self.k
         self.stats.occupancy_sum += live / self.pool.num_slots
         plen = self._prompt_len
-        self.stats.prefill_tokens += int(
+        new_prefill = int(
             (np.minimum(len_after, plen) - np.minimum(len_before, plen))
             [self._active].sum())
+        self.stats.prefill_tokens += new_prefill
+        if obs.enabled():
+            _M_SYNCS.inc()
+            _M_STEPS.inc(self.k)
+            _M_PREFILL.inc(new_prefill)
         if self.prefix_on:
             # publish fully written whole-prompt pages to the trie *before*
             # the retire loop releases this round's finished slots
@@ -323,6 +377,16 @@ class Engine:
             got = [int(t) for t in toks[:, slot][emitted[:, slot]]]
             self._slot_toks[slot].extend(got)
             self.stats.tokens_out += len(got)
+            if obs.enabled():
+                if got:
+                    _M_TOKENS.inc(len(got))
+                    if slot not in self._slot_first:
+                        # first tokens of the block all land at the sync, so
+                        # TTFT is block-granular — exactly the latency the
+                        # CA-k tradeoff spends
+                        ttft = end - self._slot_req[slot].arrival_s
+                        self._slot_first[slot] = ttft
+                        _M_TTFT.observe(ttft)
             if not done[slot]:
                 if got:
                     deltas.append(StreamDelta(id=self._slot_req[slot].id,
@@ -340,6 +404,15 @@ class Engine:
                             prompt_len=len(r.prompt),
                             queue_wait_s=t0 - r.arrival_s,
                             latency_s=end - r.arrival_s)
+            if obs.enabled():
+                _M_REQS.inc(reason=reason)
+                _M_LATENCY.observe(resp.latency_s)
+                ttft = self._slot_first.get(slot)
+                if ttft is not None and len(seq) > 1:
+                    _M_TPOT.observe((resp.latency_s - ttft) / (len(seq) - 1))
+                obs.instant("serve.retire", id=r.id, reason=reason,
+                            tokens=len(seq))
+            self._slot_first.pop(slot, None)
             out.append(resp)
             deltas.append(StreamDelta(id=r.id, tokens=got, done=True,
                                       response=resp))

@@ -22,8 +22,14 @@ import time
 from collections import deque
 from typing import Callable, List, Optional, Tuple
 
+from repro import obs
 from repro.dist import DeadlineGate
 from repro.serve.api import Request
+
+_M_QDEPTH = obs.gauge("repro_sched_queue_depth",
+                      "queued requests at the start of each round")
+_M_GATE_SHED = obs.counter("repro_sched_gate_shed_total",
+                           "requests dropped by the deadline gate")
 
 
 class Scheduler:
@@ -54,6 +60,7 @@ class Scheduler:
         expired requests dropped by the gate (empty without a gate). The
         gate runs whenever the queue is non-empty — light load included —
         so an abandoned request never spends a slot."""
+        _M_QDEPTH.set(len(self._q))
         if not self._q:
             return [], []
         now = self.clock() if now is None else now
@@ -65,6 +72,8 @@ class Scheduler:
             kept = set(kept_idx)
             shed = [r for i, r in enumerate(cand) if i not in kept]
             cand = [r for i, r in enumerate(cand) if i in kept]
+            if shed:
+                _M_GATE_SHED.inc(len(shed))
         admit = cand[:max(free_slots, 0)]
         keep_back = cand[max(free_slots, 0):]
         self._q = deque(keep_back)
