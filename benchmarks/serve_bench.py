@@ -17,6 +17,14 @@ tokens inside the fused block, so the sampled run makes EXACTLY as many host
 syncs as the greedy run — the ``mode=sampled`` ms/step rows price the
 in-scan sampling math (sort + gumbel per step), not extra round trips.
 
+Overlap rows (``mode=overlap``) rerun the greedy sweep through the
+double-buffered host loop (``Engine(overlap=True)``) and assert
+token-bit-identical output; every cell reports its hidden vs blocking sync
+split and the mean per-block host-blocked time next to the blocking
+engine's, and the compile drain's auditor additionally checks
+``audit.overlap_epochs == stats.hidden_syncs`` bitwise — the engine's
+overlap bookkeeping verified at the intercepted jax boundary.
+
 Paged rows (``layout=paged``) rerun the greedy sweep through the
 ``PagedCachePool`` engine and assert token-identical output at the identical
 sync count — pricing the page-table gather against the dense slot layout.
@@ -63,9 +71,10 @@ def _requests(cfg, n, seed=0, sampling=None):
             for i in range(n)]
 
 
-def _timed_drain(cfg, params, slots, k, sampling, page_size=None):
+def _timed_drain(cfg, params, slots, k, sampling, page_size=None,
+                 overlap=False):
     eng = Engine(params, cfg, num_slots=slots, max_len=NEW_TOKENS + 8,
-                 k=k, max_prompt=4, page_size=page_size)
+                 k=k, max_prompt=4, page_size=page_size, overlap=overlap)
     # untimed compile drain, under the jax-boundary sync auditor: the
     # engine's own sync counter must agree bitwise with the audited number
     # of host round-trip epochs — EngineStats.syncs is bookkeeping, the
@@ -75,7 +84,15 @@ def _timed_drain(cfg, params, slots, k, sampling, page_size=None):
     assert audit.syncs == eng.stats.syncs, \
         f"k={k}: audited sync epochs {audit.syncs} != " \
         f"EngineStats.syncs {eng.stats.syncs} (audit: {audit.as_dict()})"
+    # ... and so must the hidden/blocking split: exactly the fetches made
+    # with a newer block in flight count as hidden (zero on the blocking
+    # engine, where every fetch targets its own latest dispatch)
+    assert audit.overlap_epochs == eng.stats.hidden_syncs, \
+        f"k={k}: audited hidden epochs {audit.overlap_epochs} != " \
+        f"EngineStats.hidden_syncs {eng.stats.hidden_syncs}"
     base_steps, base_syncs = eng.stats.steps, eng.stats.syncs
+    base_blocked = eng.stats.host_blocked_s
+    base_hidden = eng.stats.hidden_syncs
     reqs = _requests(cfg, slots, seed=1, sampling=sampling)
     t0 = time.perf_counter()
     out = eng.run(reqs)
@@ -84,7 +101,9 @@ def _timed_drain(cfg, params, slots, k, sampling, page_size=None):
     syncs = eng.stats.syncs - base_syncs
     toks = sum(len(r.tokens) for r in out)
     seqs = {r.id: list(r.tokens) for r in out}
-    return dt, steps, syncs, toks, seqs
+    blocked = eng.stats.host_blocked_s - base_blocked
+    hidden = eng.stats.hidden_syncs - base_hidden
+    return dt, steps, syncs, toks, seqs, blocked, hidden
 
 
 PREFIX_PAGE = 8
@@ -177,14 +196,14 @@ def run():
     us_per_sync_k1 = None
     for slots in (4, 16):
         for k in (1, 4, 16):
-            dt, steps, syncs, toks, seqs = _timed_drain(cfg, params, slots,
-                                                        k, None)
+            dt, steps, syncs, toks, seqs, blocked, _ = _timed_drain(
+                cfg, params, slots, k, None)
             if k == 1 and us_per_sync_k1 is None:
                 us_per_sync_k1 = dt / syncs * 1e6
             emit(f"serve/{cfg.name}/k={k},slots={slots}", dt / steps * 1e6,
                  f"tok_per_s={toks / dt:.0f};ms_per_step={dt / steps * 1e3:.3f}")
-            sdt, ssteps, ssyncs, stoks, _ = _timed_drain(cfg, params, slots,
-                                                         k, SAMPLED)
+            sdt, ssteps, ssyncs, stoks, _, _, _ = _timed_drain(
+                cfg, params, slots, k, SAMPLED)
             # the CA-k invariant under sampling: one host sync per k steps,
             # zero extra syncs relative to the greedy schedule
             assert ssteps == ssyncs * k, \
@@ -196,7 +215,7 @@ def run():
                  sdt / ssteps * 1e6,
                  f"tok_per_s={stoks / sdt:.0f};"
                  f"ms_per_step={sdt / ssteps * 1e3:.3f};syncs={ssyncs}")
-            pdt, psteps, psyncs, ptoks, pseqs = _timed_drain(
+            pdt, psteps, psyncs, ptoks, pseqs, _, _ = _timed_drain(
                 cfg, params, slots, k, None, page_size=8)
             # paged layout must be invisible to the schedule and the tokens
             assert pseqs == seqs, f"k={k}: paged tokens diverged from slot"
@@ -206,6 +225,26 @@ def run():
                  pdt / psteps * 1e6,
                  f"tok_per_s={ptoks / pdt:.0f};"
                  f"ms_per_step={pdt / psteps * 1e3:.3f};syncs={psyncs}")
+            # double-buffered loop: identical tokens, hidden vs blocking
+            # syncs split out, per-block host-blocked time priced against
+            # the blocking engine's
+            odt, osteps, osyncs, otoks, oseqs, oblk, ohid = _timed_drain(
+                cfg, params, slots, k, None, overlap=True)
+            assert oseqs == seqs, \
+                f"k={k}: overlapped tokens diverged from blocking"
+            assert osteps == osyncs * k, \
+                f"k={k}: overlap broke CA-k ({osteps} != {osyncs} * {k})"
+            if osyncs > 1:
+                assert ohid > 0, f"k={k}: double-buffered drain never " \
+                    "overlapped a fetch"
+            blocked_us = oblk / osyncs * 1e6
+            base_us = blocked / syncs * 1e6
+            emit(f"serve/{cfg.name}/k={k},slots={slots},mode=overlap",
+                 odt / osteps * 1e6,
+                 f"tok_per_s={otoks / odt:.0f};syncs={osyncs};"
+                 f"hidden_syncs={ohid};blocking_syncs={osyncs - ohid};"
+                 f"host_blocked_us={blocked_us:.0f};"
+                 f"host_blocked_us_blocking_engine={base_us:.0f}")
     _prefix_sweep(cfg, params)
     _disabled_overhead_guard(us_per_sync_k1)
 

@@ -1,0 +1,92 @@
+"""``--autotune`` wiring for the launch CLIs.
+
+``repro.kernels.registry`` already owns the autotune machinery (candidate
+sweeps, the persisted block-size cache keyed by op/backend/shape/schema);
+this module derives the *shapes that matter for this run* from the arch
+config and the CLI geometry, so a driver can warm the cache in one flag
+instead of hand-running the registry API:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --autotune
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --autotune
+
+Serve tunes the decode-time shapes (q length 1, full KV horizon; paged
+attention too when ``--page-size`` is set). Train tunes the training shapes
+and additionally runs a ``grad=True`` pass over the backward tunables
+(flash attention's ``bq_bwd``/``bk_bwd``, ssd's ``chunk_bwd``) — backward
+block sizes are cached under separate ``<op>+bwd`` keys and only exist on
+differentiable pallas impls, so the grad pass yielding no entries on an
+XLA-only host is expected, not an error.
+
+Tuning is restricted to ``registry.resolved_backend()``: sweeping the pallas
+interpret path on CPU would rank candidates by interpreter overhead and
+poison the cache with meaningless winners.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.kernels import registry
+
+
+def add_autotune_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep kernel block-size candidates for this run's "
+                         "shapes on the resolved backend and persist the "
+                         "winners before the main loop")
+
+
+def _ssm_heads(cfg) -> int:
+    return (cfg.d_model * cfg.ssm_expand) // cfg.ssm_head_dim
+
+
+def plan_shapes(cfg, *, batch: int, seq_q: int, seq_kv: int,
+                page_size: Optional[int] = None, max_len: int = 0
+                ) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(op_name, shape) pairs this run will dispatch, in registry
+    ``make_inputs`` order. seq_q=1 is the decode geometry; seq_q==seq_kv is
+    training/prefill."""
+    plans: List[Tuple[str, Tuple[int, ...]]] = []
+    has_attn = not getattr(cfg, "attn_free", False)
+    has_ssm = bool(getattr(cfg, "subquadratic", False))
+    if has_attn:
+        plans.append(("flash_attention",
+                      (batch, seq_q, cfg.n_heads, cfg.head_dim,
+                       seq_kv, cfg.n_kv_heads)))
+        if page_size and seq_q == 1:
+            npg = max(math.ceil(max_len / page_size), 1)
+            plans.append(("paged_attention",
+                          (batch, cfg.n_heads, cfg.head_dim,
+                           cfg.n_kv_heads, npg, page_size)))
+    if has_ssm:
+        plans.append(("ssd", (batch, max(seq_q, cfg.ssm_conv),
+                              _ssm_heads(cfg), cfg.ssm_head_dim,
+                              cfg.ssm_state)))
+    return plans
+
+
+def run_autotune(plans: Sequence[Tuple[str, Tuple[int, ...]]], *,
+                 grad: bool = False, iters: int = 3) -> dict:
+    """Sweep each planned op on the resolved backend; with ``grad=True`` add
+    a backward-tunable pass. Returns all new cache entries (also persisted
+    by the registry). Prints one line per op so the driver's log shows what
+    was tuned and what the winner costs."""
+    backend = registry.resolved_backend()
+    entries: dict = {}
+    for op_name, shape in plans:
+        got = registry.autotune(op_name, [shape], backends=[backend],
+                                iters=iters)
+        if grad:
+            got.update(registry.autotune(op_name, [shape],
+                                         backends=[backend], iters=iters,
+                                         grad=True))
+        if got:
+            for key, e in got.items():
+                print(f"autotune[{backend}] {key}: {e['params']} "
+                      f"({e['us']:.0f} us)")
+        else:
+            print(f"autotune[{backend}] {op_name}{shape}: no tunables "
+                  "on this backend (skipped)")
+        entries.update(got)
+    return entries

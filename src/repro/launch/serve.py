@@ -28,6 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, smoke_config
+from repro.launch.autotune_cli import (add_autotune_args, plan_shapes,
+                                       run_autotune)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.obs_cli import add_obs_args, obs_begin, obs_end
 from repro.launch.steps import make_serve_step
@@ -94,7 +96,8 @@ def serve_engine(cfg, rules, args):
                     max_prompt=min(16, args.max_len // 2),
                     enc_len=args.max_len if cfg.family == "audio" else None,
                     page_size=args.page_size or None,
-                    prefix_cache=args.prefix_cache)
+                    prefix_cache=args.prefix_cache,
+                    overlap=args.overlap)
     reqs = _synthetic_requests(cfg, args.requests or 2 * args.batch,
                                min(16, args.max_len // 2), args.new_tokens,
                                args.max_len, sampling=_cli_sampling(args))
@@ -208,11 +211,23 @@ def main(argv=None):
                     help="engine mode, with --page-size: reuse radix-trie "
                          "shared prompt-prefix pages across requests and "
                          "skip their prefill steps")
+    ap.add_argument("--overlap", action="store_true",
+                    help="engine mode: double-buffer the host loop — "
+                         "dispatch each k-block before blocking on the "
+                         "previous one (tokens identical; hidden_syncs / "
+                         "host_blocked stats report the effect)")
+    add_autotune_args(ap)
     add_obs_args(ap)
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
     cfg = smoke_config(arch) if args.preset == "tiny" else arch
+    if args.autotune:
+        # decode geometry: q length 1 against the full KV horizon
+        run_autotune(plan_shapes(cfg, batch=args.batch, seq_q=1,
+                                 seq_kv=args.max_len,
+                                 page_size=args.page_size or None,
+                                 max_len=args.max_len))
     rules = make_rules(make_host_mesh())
     observing = obs_begin(args)
     try:

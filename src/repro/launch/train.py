@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, smoke_config
+from repro.launch.autotune_cli import (add_autotune_args, plan_shapes,
+                                       run_autotune)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.obs_cli import add_obs_args, obs_begin, obs_end
 from repro.launch.steps import make_train_step, init_train_state, TrainState
@@ -51,11 +53,18 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject node failures at these steps (FT demo)")
     ap.add_argument("--log-every", type=int, default=10)
+    add_autotune_args(ap)
     add_obs_args(ap)
     args = ap.parse_args(argv)
     observing = obs_begin(args)
 
     cfg, batch, seq = build(args)
+    if args.autotune:
+        # training geometry, forward AND backward tunables (bwd winners are
+        # cached under separate <op>+bwd keys; pallas-only, so an XLA host
+        # reports the forward entries and skips the rest)
+        run_autotune(plan_shapes(cfg, batch=batch, seq_q=seq, seq_kv=seq),
+                     grad=True)
     mesh = make_host_mesh()
     rules = make_rules(mesh)
 

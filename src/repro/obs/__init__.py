@@ -9,7 +9,12 @@ Three pillars, one switch:
 - ``sync_audit`` — a context manager counting host<->device synchronization
                    points (blocking reads, coalesced into round-trip epochs
                    at ``mark_dispatch`` boundaries) — the empirical check of
-                   the paper's CA-k sync-per-k-steps claim.
+                   the paper's CA-k sync-per-k-steps claim. ``mark_dispatch``
+                   returns a ticket; a double-buffered host loop announces
+                   the ticket it is about to block on via ``mark_fetch``,
+                   and epochs that fetch a stale ticket (newer device work
+                   already in flight) are counted as ``overlap_epochs`` —
+                   *hidden* syncs, as opposed to blocking pipeline stalls.
 
 ``enable()`` turns span/metric recording on (the launch CLIs do this from
 ``--metrics``/``--trace-out``); while disabled every instrumentation point
@@ -24,7 +29,8 @@ from repro.obs import metrics
 from repro.obs.metrics import (REGISTRY, counter, gauge, histogram,
                                to_prometheus, to_jsonl, write_prometheus,
                                write_jsonl)
-from repro.obs.sync_audit import SyncAudit, sync_audit, mark_dispatch
+from repro.obs.sync_audit import (SyncAudit, sync_audit, mark_dispatch,
+                                  mark_fetch)
 
 
 def metrics_snapshot() -> dict:
@@ -44,5 +50,5 @@ __all__ = [
     "metrics", "REGISTRY", "counter", "gauge", "histogram",
     "to_prometheus", "to_jsonl", "write_prometheus", "write_jsonl",
     "metrics_snapshot",
-    "SyncAudit", "sync_audit", "mark_dispatch",
+    "SyncAudit", "sync_audit", "mark_dispatch", "mark_fetch",
 ]

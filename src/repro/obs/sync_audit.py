@@ -21,6 +21,15 @@ Counting semantics (the paper's alpha-beta cost split):
   serve engine, the training runner) mark their dispatch sites; the markers
   are unconditional no-ops outside an active audit.
 * ``dispatches`` counts those announced dispatch boundaries.
+* ``overlap_epochs`` counts *hidden* syncs: epochs whose reads fetch the
+  results of a dispatch that is no longer the latest one — i.e. the host had
+  already dispatched newer device work before blocking, so the wait was
+  (partly) covered by useful compute. :func:`mark_dispatch` returns a
+  monotonically increasing ticket; a host loop that double-buffers announces
+  which dispatch it is about to fetch via :func:`mark_fetch(ticket)
+  <mark_fetch>`, and the next epoch counts as hidden iff the ticket is older
+  than the latest dispatch. A loop that always fetches its own latest
+  dispatch (the classic blocking schedule) never produces hidden epochs.
 * ``by_span`` attributes each sync to the innermost active
   :mod:`repro.obs.spans` span at the moment it was counted.
 
@@ -53,6 +62,7 @@ _audits: List["SyncAudit"] = []
 _patch_lock = threading.Lock()
 _saved: dict = {}
 _tls = threading.local()                # .in_read: reentrancy guard
+_dispatch_seq = 0                       # monotonic mark_dispatch ticket
 
 #: (holder, attribute) module-level functions to wrap; each call is one read
 _FN_PATCHES = (("block_until_ready", jax), ("device_get", jax))
@@ -73,10 +83,13 @@ class SyncAudit:
         self.syncs = 0              # coalesced round-trip epochs (alpha term)
         self.transfers = 0          # raw intercepted device reads (beta term)
         self.dispatches = 0         # mark_dispatch() boundaries
+        self.overlap_epochs = 0     # hidden syncs (fetch of a stale ticket)
         self.block_until_ready = 0
         self.device_get = 0
         self.by_span: Dict[str, int] = {}
         self._epoch_open = False
+        self._last_seq: Optional[int] = None    # latest dispatch ticket seen
+        self._fetch_hidden = False              # next epoch is a hidden sync
 
     def _read(self, kind: str) -> None:
         self.transfers += 1
@@ -87,16 +100,40 @@ class SyncAudit:
         if not self._epoch_open:
             self._epoch_open = True
             self.syncs += 1
+            if self._fetch_hidden:
+                self.overlap_epochs += 1
+                self._fetch_hidden = False
             name = spans.current()
             self.by_span[name] = self.by_span.get(name, 0) + 1
 
-    def _dispatch(self) -> None:
+    def _dispatch(self, seq: int) -> None:
         self.dispatches += 1
         self._epoch_open = False
+        self._last_seq = seq
+        self._fetch_hidden = False  # a newer dispatch voids the announcement
+
+    def _fetch(self, ticket: Optional[int]) -> None:
+        # a fetch boundary is also an epoch boundary: reads coalesce only
+        # within one dispatched computation's result set, and this announces
+        # the results of a *specific* dispatch are about to be read (e.g.
+        # back-to-back completions at the tail of a double-buffered drain
+        # are separate round trips, not siblings of one sync)
+        self._epoch_open = False
+        # the next epoch is hidden iff it fetches results of a dispatch that
+        # is no longer the latest: newer device work was already in flight
+        self._fetch_hidden = (ticket is not None
+                              and self._last_seq is not None
+                              and ticket < self._last_seq)
+
+    @property
+    def blocking_syncs(self) -> int:
+        """Epochs with nothing newer in flight — true pipeline stalls."""
+        return self.syncs - self.overlap_epochs
 
     def as_dict(self) -> dict:
         return dict(syncs=self.syncs, transfers=self.transfers,
                     dispatches=self.dispatches,
+                    overlap_epochs=self.overlap_epochs,
                     block_until_ready=self.block_until_ready,
                     device_get=self.device_get, by_span=dict(self.by_span))
 
@@ -110,17 +147,37 @@ def _count_read(kind: str) -> None:
         a._read(kind)
 
 
-def mark_dispatch(site: str = "") -> None:
+def mark_dispatch(site: str = "") -> int:
     """Announce a host->device dispatch boundary (closes the read epoch).
 
     Instrumented host loops call this immediately before dispatching a
-    jitted computation whose results they will fetch. No-op (one truthiness
-    check) when no audit is active.
+    jitted computation whose results they will fetch. Returns a monotonic
+    ticket identifying the dispatch; a double-buffered loop hands the ticket
+    to :func:`mark_fetch` when it later blocks on the results, so the audit
+    can classify the sync as hidden vs blocking. Near-no-op (one integer
+    increment + truthiness check) when no audit is active.
+    """
+    global _dispatch_seq
+    _dispatch_seq += 1
+    if _audits:
+        for a in _audits:
+            a._dispatch(_dispatch_seq)
+    return _dispatch_seq
+
+
+def mark_fetch(ticket: Optional[int] = None) -> None:
+    """Announce that the upcoming device reads fetch the results of the
+    dispatch identified by ``ticket`` (from :func:`mark_dispatch`).
+
+    If newer work was dispatched since — ``ticket`` is stale — the epoch the
+    reads open counts toward ``overlap_epochs``: the host had productive
+    device work in flight while it waited, so the round trip was hidden
+    rather than a stall. No-op when no audit is active or ticket is None.
     """
     if not _audits:
         return
     for a in _audits:
-        a._dispatch()
+        a._fetch(ticket)
 
 
 @contextlib.contextmanager

@@ -1,6 +1,7 @@
 from repro.optim.adamw import adamw_init, adamw_update, OptState
 from repro.optim.schedule import cosine_schedule
-from repro.optim.ca_sync import ca_local_sgd_solver
+from repro.optim.ca_sync import (ca_local_sgd_solver, ca_stale_k_solver,
+                                 StaleKSolver)
 
 __all__ = ["adamw_init", "adamw_update", "OptState", "cosine_schedule",
-           "ca_local_sgd_solver"]
+           "ca_local_sgd_solver", "ca_stale_k_solver", "StaleKSolver"]

@@ -81,10 +81,26 @@ class EngineStats:
     prefix_tokens: int = 0                   # prefill tokens skipped via reuse
     cow_copies: int = 0                      # copy-on-write divergence pages
     page_defrags: int = 0                    # page-pool compactions
+    # double-buffered loop counters (zero on the non-overlapped engine)
+    hidden_syncs: int = 0                    # block fetches made while a newer
+                                             # block was already in flight
+    host_blocked_s: float = 0.0              # wall time blocked fetching
+                                             # k-block results (all syncs)
 
     @property
     def occupancy(self) -> float:
         return self.occupancy_sum / self.syncs if self.syncs else 0.0
+
+    @property
+    def blocking_syncs(self) -> int:
+        """Syncs with no newer block in flight — true pipeline stalls."""
+        return self.syncs - self.hidden_syncs
+
+    @property
+    def host_blocked_per_sync(self) -> float:
+        """Mean host wall time blocked per k-block result fetch — the number
+        the double-buffered loop exists to shrink."""
+        return self.host_blocked_s / self.syncs if self.syncs else 0.0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -109,4 +125,9 @@ class EngineStats:
             s += (f" prefix_hit_rate={self.prefix_hit_rate:.2f} "
                   f"prefix_tokens={self.prefix_tokens} "
                   f"cow_copies={self.cow_copies}")
+        if self.hidden_syncs:
+            s += (f" hidden_syncs={self.hidden_syncs} "
+                  f"blocking_syncs={self.blocking_syncs} "
+                  f"host_blocked_per_sync="
+                  f"{self.host_blocked_per_sync * 1e3:.3f}ms")
         return s

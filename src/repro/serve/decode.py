@@ -27,6 +27,19 @@ Sampling rides the same schedule: when a ``SlotSampling`` bundle is passed,
 all k next-token draws (temperature / top-p / top-k, per-slot PRNG keys)
 happen inside the scan body — see ``repro.serve.sampling`` — so stochastic
 decode costs exactly as many host syncs as greedy: one per k tokens.
+
+Overlap contract (the engine's double-buffered loop, ``overlap=True``): a
+block is a pure function of its dispatch-time inputs — every host-side
+argument (prompt buffer, sampling policy, page table) is device-copied at
+the call, and the carry it returns is only ever *functionally* updated by
+later admissions, so jax's data-flow ordering serializes a block's writes
+before the next block's reads with no host barrier. While a block is in
+flight its slot rows are *owned*: the engine must not free/reallocate them
+(stale-slot fencing) and must not permute them (defrag flushes the pipeline
+first). Frozen-slot writes during that window land beyond the slot's own
+``kv_valid`` horizon, and — in the paged layout — never inside published
+prompt pages (a done slot writes at ``lengths >= prompt_len``), which is
+what makes an in-flight block's garbage invisible to every other request.
 """
 from __future__ import annotations
 

@@ -19,9 +19,29 @@ Streaming: ``stream_step`` additionally returns per-request token deltas for
 the round (``StreamDelta``), and ``stream`` is the generator form — tokens
 surface every k-block instead of at retirement. ``step``/``run`` keep the
 whole-response contract.
+
+Double-buffering (``overlap=True``): the CA-k schedule already cut the sync
+*count* to one per k steps; the overlapped loop hides the one that remains.
+``jax.jit`` dispatch is asynchronous, so each round dispatches block i+1
+*before* blocking on block i's device->host transfer — all host work of a
+round (admission, prompt staging, detokenize, stream deltas, scheduler and
+defrag bookkeeping) overlaps device compute of the newer block, on a
+one-deep pipeline of :class:`_InFlight` records. Correctness rests on
+stale-slot fencing (mirroring the paged pool's page-table discipline): a
+slot retired while a newer block is still in flight is *fenced* — its pool
+row, pages, and PRNG key are released only when that block completes, so
+admission can never hand the row to a new request the in-flight block still
+writes. Structural moves (slot/page defrag) flush the pipeline first.
+Admission updates are safe mid-flight because they are functional updates on
+the in-flight block's *output* arrays — jax orders them by data flow — and
+every block input (prompt buffers, sampling policy, page tables) is
+snapshotted to the device at dispatch. Token streams are bit-identical to
+the non-overlapped engine: per-slot decode depends only on the request
+(prompt, key, max_new), never on placement or fetch timing.
 """
 from __future__ import annotations
 
+import time
 from typing import Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -70,6 +90,40 @@ _M_QWAIT = obs.histogram("repro_serve_queue_wait_seconds",
                          "submit -> slot assignment")
 _M_LATENCY = obs.histogram("repro_serve_latency_seconds",
                            "submit -> retirement")
+_M_HIDDEN = obs.counter("repro_serve_hidden_syncs_total",
+                        "k-block fetches made while a newer block was "
+                        "already in flight (double-buffered loop)")
+_M_BLOCKED = obs.histogram("repro_serve_host_blocked_seconds",
+                           "host wall time blocked per k-block result fetch")
+
+
+class _InFlight:
+    """One dispatched-but-not-fetched k-block (the pipeline entry).
+
+    Captures the block's raw output arrays at dispatch — before any later
+    admission functionally updates ``Engine.state`` — so completion reads
+    exactly what this block computed. ``slots``/``active`` snapshot the slot
+    ownership at dispatch: completion only touches rows this block owned,
+    and ``deferred`` collects slots retired while the block was in flight —
+    their pool rows stay fenced (allocated, unreusable) until the block
+    lands, because its device writes still target them.
+    """
+
+    __slots__ = ("toks", "emitted", "done", "eos_hit", "lengths", "slots",
+                 "active", "live", "ticket", "deferred")
+
+    def __init__(self, toks, emitted, done, eos_hit, lengths, slots, active,
+                 live, ticket):
+        self.toks = toks                # (k, B) device tokens
+        self.emitted = emitted          # (k, B) device emit mask
+        self.done = done                # (B,) device done mask (post-block)
+        self.eos_hit = eos_hit          # (B,) device eos branch
+        self.lengths = lengths          # (B,) device lengths (post-block)
+        self.slots = slots              # slot ids owned at dispatch
+        self.active = active            # (B,) host bool snapshot at dispatch
+        self.live = live                # active slot count at dispatch
+        self.ticket = ticket            # obs.mark_dispatch ticket
+        self.deferred: List[int] = []   # retired slots fenced on this block
 
 
 class Engine:
@@ -92,6 +146,11 @@ class Engine:
     in per-request encoder output — so ssm/hybrid/audio decline it.
     num_pages: page-pool depth override (default: full slot backing + 1
     scratch page).
+    overlap: double-buffer the host loop — dispatch each round's block
+    before blocking on the previous round's results, hiding the per-block
+    host work behind device compute (see module docstring). Token streams
+    are bit-identical either way; ``stats.hidden_syncs`` /
+    ``stats.host_blocked_s`` report the effect.
     """
 
     def __init__(self, params, cfg, *, rules=None, num_slots: int = 8,
@@ -103,7 +162,8 @@ class Engine:
                  defrag_threshold: float = 0.5,
                  page_size: Optional[int] = None,
                  prefix_cache: bool = False,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 overlap: bool = False):
         self.params = params
         self.cfg = cfg
         self.k = int(k)
@@ -129,6 +189,8 @@ class Engine:
                           and cfg.family in ("dense", "vlm", "moe"))
         self.scheduler = scheduler if scheduler is not None else Scheduler()
         self.defrag_threshold = float(defrag_threshold)
+        self.overlap = bool(overlap)
+        self._pipe: List[_InFlight] = []    # one-deep dispatch pipeline
         self._block = make_decode_block(cfg, rules, k=self.k,
                                         max_len=self.max_len, eos_id=eos_id)
         self.state = init_decode_state(self.pool.make_cache(), num_slots)
@@ -268,7 +330,22 @@ class Engine:
         return out
 
     # -------------------------------------------------------------- defrag
+    def _needs_defrag(self) -> bool:
+        """Threshold check only — used by the overlapped loop to decide
+        whether a pipeline flush (and its one-round bubble) is worth it.
+        Fenced slots awaiting release still count as live here; their frees
+        land next completion and the check runs every round, so a triggered
+        defrag is at most one round late."""
+        if self.pool.live_count and \
+                self.pool.fragmentation() >= self.defrag_threshold:
+            return True
+        return self.paged and \
+            self.pool.page_fragmentation() >= self.defrag_threshold
+
     def _maybe_defrag(self) -> None:
+        # defrag permutes slot rows / page tables in place: the overlapped
+        # loop must flush its pipeline first (no block may own moved rows)
+        assert not self._pipe, "defrag with a block in flight"
         if self.pool.live_count and \
                 self.pool.fragmentation() >= self.defrag_threshold:
             cache, perm, mapping = self.pool.defrag(self.state.cache)
@@ -309,27 +386,16 @@ class Engine:
             self.stats.page_defrags += 1
             _M_DEFRAGS.inc(kind="page")
 
-    # ---------------------------------------------------------------- step
-    def stream_step(self, now: Optional[float] = None
-                    ) -> Tuple[List[StreamDelta], List[Response]]:
-        """One scheduling round + one fused k-step block + one host sync.
+    # ------------------------------------------------------ dispatch/fetch
+    def _dispatch_block(self) -> _InFlight:
+        """Dispatch one fused k-step block (async — no host sync here).
 
-        Returns ``(deltas, responses)``: ``responses`` are the round's
-        completed requests (retired / shed / rejected — the ``step()``
-        contract); ``deltas`` additionally surface the tokens every live
-        request gained this block, so callers can stream k tokens per sync
-        instead of waiting for retirement.
+        Every input the block reads is snapshotted at this point: prompt
+        buffers / sampling policy / page tables copy host->device now, and
+        the returned record captures the raw output arrays before any later
+        admission functionally updates ``self.state`` on top of them.
         """
-        now = self.scheduler.clock() if now is None else now
-        with obs.span("serve.admit"):
-            out = self._admit(now)
-        # shed / rejected requests never held a slot: terminal delta only
-        deltas = [StreamDelta(id=r.id, tokens=[], done=True, response=r)
-                  for r in out]
-        live = self.pool.live_count
-        if live == 0:
-            return deltas, out
-        len_before = self._len_host   # mirrors device lengths: no extra sync
+        live = int(self._active.sum())
         samp = SlotSampling(temperature=jnp.asarray(self._temp),
                             top_p=jnp.asarray(self._top_p),
                             top_k=jnp.asarray(self._top_k),
@@ -337,43 +403,78 @@ class Engine:
         page_table = None
         if self.paged:
             # pre-reserve pages for every position this block can write, so
-            # the table is constant across the k in-scan steps
+            # the table is constant across the k in-scan steps; under
+            # overlap ``_len_host`` is one un-fetched block stale, so the
+            # horizon covers the in-flight block's k steps plus this one's
+            horizon = self.k * (2 if self.overlap else 1)
             for slot in self._slot_req:
-                self.pool.reserve(slot, int(self._len_host[slot]) + self.k)
+                self.pool.reserve(slot, int(self._len_host[slot]) + horizon)
             page_table = jnp.asarray(self.pool.tables)
-        obs.mark_dispatch("serve.decode_block")
+        ticket = obs.mark_dispatch("serve.decode_block")
         with obs.span("serve.decode_block", k=self.k, live=live):
             self.state, toks, emitted = self._block(
                 self.params, self.state, jnp.asarray(self._prompt_buf),
                 jnp.asarray(self._prompt_len), jnp.asarray(self._max_new),
                 jnp.asarray(self._active), samp, page_table)
-            # the round's single host sync: k tokens + per-slot masks
-            toks = np.asarray(toks)
-            emitted = np.asarray(emitted)
-            done = np.asarray(self.state.done)
-            eos_hit = np.asarray(self.state.eos_hit)
-            len_after = np.asarray(self.state.lengths)
-        self._len_host = len_after.copy()   # writable host mirror
+        return _InFlight(toks, emitted, self.state.done, self.state.eos_hit,
+                         self.state.lengths, list(self._slot_req),
+                         self._active.copy(), live, ticket)
+
+    def _complete_block(self, inf: _InFlight
+                        ) -> Tuple[List[StreamDelta], List[Response]]:
+        """Fetch one in-flight block's results (the round's single host
+        sync) and run the host half of the round: stats, prefix publishing,
+        token extension, retirement. Completion only touches slots the block
+        owned at dispatch — rows admitted after are left to their own block."""
+        # fence release: slots retired while ``inf`` was in flight return to
+        # the pool only now — nothing could reallocate them while the
+        # block's device writes still targeted their rows/pages
+        for slot in inf.deferred:
+            self.pool.free(slot)
+        overlapped = bool(self._pipe)   # a newer block is already in flight
+        obs.mark_fetch(inf.ticket)
+        t0 = time.perf_counter()
+        with obs.span("serve.decode_block", k=self.k, live=inf.live,
+                      fetch=1):
+            # one coalesced device->host transfer: k tokens + per-slot masks
+            toks, emitted, done, eos_hit, len_after = jax.device_get(
+                (inf.toks, inf.emitted, inf.done, inf.eos_hit, inf.lengths))
+        blocked = time.perf_counter() - t0
+        out: List[Response] = []
+        deltas: List[StreamDelta] = []
         self.stats.syncs += 1
         self.stats.steps += self.k
-        self.stats.occupancy_sum += live / self.pool.num_slots
+        self.stats.occupancy_sum += inf.live / self.pool.num_slots
+        self.stats.host_blocked_s += blocked
+        if overlapped:
+            self.stats.hidden_syncs += 1
+        # host length mirror: only rows this block owned advanced; rows
+        # admitted while it was in flight keep their admission-time value
+        len_before = self._len_host
         plen = self._prompt_len
         new_prefill = int(
             (np.minimum(len_after, plen) - np.minimum(len_before, plen))
-            [self._active].sum())
+            [inf.active].sum())
+        self._len_host = np.where(inf.active, len_after, self._len_host)
         self.stats.prefill_tokens += new_prefill
         if obs.enabled():
             _M_SYNCS.inc()
             _M_STEPS.inc(self.k)
             _M_PREFILL.inc(new_prefill)
+            _M_BLOCKED.observe(blocked)
+            if overlapped:
+                _M_HIDDEN.inc()
         if self.prefix_on:
             # publish fully written whole-prompt pages to the trie *before*
             # the retire loop releases this round's finished slots
-            for slot in self._slot_req:
-                self.pool.register_prefix(slot, self._slot_prompt[slot],
-                                          int(len_after[slot]))
+            for slot in inf.slots:
+                if slot in self._slot_req:
+                    self.pool.register_prefix(slot, self._slot_prompt[slot],
+                                              int(len_after[slot]))
         end = self.scheduler.clock()   # same clock as admission timestamps
-        for slot in list(self._slot_req):
+        for slot in inf.slots:
+            if slot not in self._slot_req:
+                continue                # retired by an earlier completion
             got = [int(t) for t in toks[:, slot][emitted[:, slot]]]
             self._slot_toks[slot].extend(got)
             self.stats.tokens_out += len(got)
@@ -416,7 +517,14 @@ class Engine:
             out.append(resp)
             deltas.append(StreamDelta(id=r.id, tokens=got, done=True,
                                       response=resp))
-            self.pool.free(slot)
+            if self._pipe:
+                # stale-slot fence: a newer in-flight block still owns this
+                # row (it was active at that block's dispatch) — defer the
+                # pool free until that block completes, so admission can't
+                # hand the row to a request the block still writes
+                self._pipe[-1].deferred.append(slot)
+            else:
+                self.pool.free(slot)
             self._active[slot] = False
             # reset the slot's sampling policy with it: a stale temperature
             # in a freed slot would keep the whole-batch-greedy fast path
@@ -425,7 +533,57 @@ class Engine:
             self._top_p[slot] = 1.0
             self._top_k[slot] = 0
             self.stats.retired += 1
-        self._maybe_defrag()
+        return deltas, out
+
+    # ---------------------------------------------------------------- step
+    def stream_step(self, now: Optional[float] = None
+                    ) -> Tuple[List[StreamDelta], List[Response]]:
+        """One scheduling round + one fused k-step block + one host sync.
+
+        Returns ``(deltas, responses)``: ``responses`` are the round's
+        completed requests (retired / shed / rejected — the ``step()``
+        contract); ``deltas`` additionally surface the tokens every live
+        request gained this block, so callers can stream k tokens per sync
+        instead of waiting for retirement.
+
+        The round clock is taken at entry — *before* the block dispatch and
+        before blocking on any previous block's results — so DeadlineGate
+        waits are measured against dispatch time. Evaluating them after the
+        completion fetch would silently extend every deadline by one block
+        under the double-buffered loop.
+        """
+        now = self.scheduler.clock() if now is None else now
+        with obs.span("serve.admit"):
+            out = self._admit(now)
+        # shed / rejected requests never held a slot: terminal delta only
+        deltas = [StreamDelta(id=r.id, tokens=[], done=True, response=r)
+                  for r in out]
+        if not self.overlap:
+            # classic blocking schedule: dispatch, then fetch immediately
+            if self._active.any():
+                d, o = self._complete_block(self._dispatch_block())
+                deltas += d
+                out += o
+                self._maybe_defrag()
+            return deltas, out
+        if self._active.any():
+            self._pipe.append(self._dispatch_block())
+        # keep the pipeline one deep: fetch the oldest block once a newer
+        # one is in flight (its host work hides behind device compute), and
+        # drain fully when nothing new was dispatched (tail of the stream)
+        while self._pipe and (len(self._pipe) > 1
+                              or not self._active.any()):
+            d, o = self._complete_block(self._pipe.pop(0))
+            deltas += d
+            out += o
+        if self._needs_defrag():
+            # structural slot/page moves: flush the pipeline first — defrag
+            # must never permute rows an in-flight block still owns
+            while self._pipe:
+                d, o = self._complete_block(self._pipe.pop(0))
+                deltas += d
+                out += o
+            self._maybe_defrag()
         return deltas, out
 
     def step(self, now: Optional[float] = None) -> List[Response]:
@@ -436,7 +594,8 @@ class Engine:
 
     # ----------------------------------------------------------------- run
     def _drained(self) -> bool:
-        return not len(self.scheduler) and self.pool.live_count == 0
+        return (not len(self.scheduler) and self.pool.live_count == 0
+                and not self._pipe)
 
     def run(self, requests: Iterable[Request] = (), *,
             max_syncs: int = 1_000_000) -> List[Response]:

@@ -13,6 +13,13 @@ the gate drops them (``finish_reason="shed"``) — but never more than a
 The gate is consulted on every non-empty round, not just under overload: an
 expired request wastes a slot whether or not the queue outnumbers the free
 slots.
+
+Clock discipline: ``now`` is supplied by the engine from the *start* of the
+round — block-dispatch time, before it blocks on any in-flight block's
+results. Under the double-buffered loop (``Engine(overlap=True)``) the fetch
+of block i happens after block i+1 is dispatched; evaluating deadlines at
+that point would silently credit every queued request one extra block of
+wait and shed requests that were within budget when the round began.
 This closes the ROADMAP item of wiring ``DeadlineGate`` into the CA-k path:
 the k-step decode block is the collective, admission is its gate.
 """
