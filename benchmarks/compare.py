@@ -53,7 +53,12 @@ def compare(fresh: Dict[Key, dict], base: Dict[Key, dict],
             lines.append(f"  new       {name}: {f_us:.2f} us")
             continue
         b_us = float(b["us_per_call"])
-        ratio = f_us / b_us if b_us > 0 else float("inf")
+        if b_us > 0:
+            ratio = f_us / b_us
+        else:
+            # metric-only rows (convergence suites) emit us_per_call=0 on
+            # both sides: 0 -> 0 is "unchanged", not a regression
+            ratio = 1.0 if f_us == 0 else float("inf")
         tag = "ok"
         if ratio > 1.0 + threshold:
             tag = "REGRESSED"

@@ -1,35 +1,53 @@
-"""Paper Figure 3: effect of k on convergence/stability — the k-step
-trajectories must coincide with the classical (k=1) ones."""
+"""Paper Figure 3: effect of k on convergence/stability, for EVERY solver
+pair in the family — the k-step trajectories must coincide with the classical
+(k=1) ones.
+
+One row per (dataset, solver, k): relative solution error at T, plus the
+max-abs trajectory drift of the k-step run against the same solver at k=1
+(identical draws, regrouped schedule). For the gram-schedule solvers
+(fista/pnm/pdhg) the drift is float-reassociation noise only; for CA-BCD the
+in-block gradient replay reassociates a matvec, so its drift is slightly
+larger but still vanishing relative to iterate scale (the emitted rows make
+the per-solver difference visible in the archived artifact).
+"""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import (SolverConfig, ca_sfista, ca_spnm, sfista, spnm,
+from repro.core import (SolverConfig, ca_sfista, ca_spnm, ca_pdhg, ca_bcd,
                         solve_reference, relative_solution_error)
 from repro.data import make_dataset_like
 from benchmarks.common import emit
 
+SOLVER_PAIRS = (
+    ("ca_sfista", ca_sfista),
+    ("ca_spnm", ca_spnm),
+    ("ca_pdhg", ca_pdhg),
+    ("ca_bcd", ca_bcd),
+)
 
-def run(datasets=("abalone", "covtype"), ks=(1, 8, 32, 128), T=256, b=0.1):
+
+def run(datasets=("abalone", "covtype"), ks=(1, 8, 32), T=256, b=0.1):
     key = jax.random.PRNGKey(0)
     rows = []
     for ds in datasets:
         prob, _ = make_dataset_like(ds, scale=0.1)
         w_opt = solve_reference(prob)
-        ref = None
-        for k in ks:
-            cfg = SolverConfig(T=T, k=k, b=b)
-            w, hist = ca_sfista(prob, cfg, key, collect_history=True)
-            err = float(relative_solution_error(w, w_opt))
-            if ref is None:
-                ref = np.asarray(hist)
-                drift = 0.0
-            else:
-                drift = float(np.abs(ref - np.asarray(hist)).max())
-            rows.append((ds, k, err, drift))
-            emit(f"fig3/{ds}/k={k}/ca_sfista", 0.0,
-                 f"rel_err={err:.4f};traj_drift_vs_k1={drift:.2e}")
+        for sname, solver in SOLVER_PAIRS:
+            ref = None
+            for k in ks:
+                cfg = SolverConfig(T=T, k=k, b=b)
+                w, hist = solver(prob, cfg, key, collect_history=True)
+                err = float(relative_solution_error(w, w_opt))
+                if ref is None:
+                    ref = np.asarray(hist)
+                    drift = 0.0
+                else:
+                    drift = float(np.abs(ref - np.asarray(hist)).max())
+                rows.append((ds, sname, k, err, drift))
+                emit(f"fig3/{ds}/{sname}/k={k}", 0.0,
+                     f"rel_err={err:.4f};traj_drift_vs_k1={drift:.2e}")
     return rows
 
 

@@ -29,7 +29,8 @@ from repro.roofline.hlo_cost import analyze_hlo
 prob, _ = make_lasso_data(jax.random.PRNGKey(0), d=16, n=1024)
 mesh = jax.make_mesh((8,), ("data",))
 cfg = SolverConfig(T=32, k=8, b=0.1)
-for alg in ["sfista", "ca_sfista", "spnm", "ca_spnm"]:
+for alg in ["sfista", "ca_sfista", "spnm", "ca_spnm",
+            "pdhg", "ca_pdhg", "bcd", "ca_bcd"]:
     solve = make_distributed_solver(alg, mesh, cfg, prob.lam)
     lowered = solve.lower(
         jax.ShapeDtypeStruct((16, 1024), jnp.float32),
@@ -54,6 +55,12 @@ def run():
                  f";flops_ratio={c1.flops(P)/ck.flops(P):.3f}"
                  f";bw_ratio={c1.words(P)/ck.words(P):.3f}"
                  f";mem_overhead_words={ck.memory(P, ca=True)-c1.memory(P):.0f}")
+            # CA-BCD's tradeoff row (1612.04003 Table 1): same k-fold latency
+            # win, but the cross-Gram word volume inflates ~k-fold
+            emit(f"table1/bcd/d={d}/P={P}", 0.0,
+                 f"latency_ratio={c1.messages(P, solver='bcd')/ck.messages(P, ca=True, solver='bcd'):.1f}"
+                 f";word_inflation={ck.words(P, solver='bcd', ca=True)/c1.words(P, solver='bcd'):.2f}"
+                 f";flops_ratio={c1.flops(P, solver='bcd')/ck.flops(P, solver='bcd'):.3f}")
 
     # --- structural HLO verification ---------------------------------------
     env = dict(os.environ,
@@ -68,9 +75,11 @@ def run():
     stats = {}
     for m in re.finditer(r"(\w+) ROUNDS (\d+) BYTES (\d+)", out.stdout):
         stats[m.group(1)] = (int(m.group(2)), int(m.group(3)))
-    for base in ("sfista", "spnm"):
+    for base in ("sfista", "spnm", "pdhg", "bcd"):
         cr, cb = stats[base]
         ar, ab = stats["ca_" + base]
+        # gram solvers: bytes_ratio ~1 (volume unchanged); bcd: ~1/k (the
+        # CA cross-Gram inflates words k-fold, see CostModel.words)
         emit(f"table1/hlo/{base}", 0.0,
              f"classical_rounds={cr};ca_rounds={ar};"
              f"round_ratio={cr/max(ar,1):.1f};"

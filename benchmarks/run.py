@@ -39,6 +39,7 @@ SUITES = {
 BENCH_FILES = {
     "kernels": "BENCH_kernels.json",
     "serve": "BENCH_serve.json",
+    "fig3_convergence_k": "BENCH_convergence.json",
 }
 
 #: sentinel us_per_call marking "suite died before producing this row"

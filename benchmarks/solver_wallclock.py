@@ -1,22 +1,29 @@
 """Measured single-host wall-clock: CA vs classical per-iteration cost must
 be ~equal (the paper: flops unchanged) — the win is purely in communication,
-which the HLO round counts (cost_table) capture."""
+which the HLO round counts (cost_table) capture. Covers the whole solver
+family: fista/pnm/pdhg on the gram schedule, bcd on the coordinate
+schedule."""
 from __future__ import annotations
 
 import jax
 
-from repro.core import SolverConfig, sfista, ca_sfista, spnm, ca_spnm
+from repro.core import (SolverConfig, sfista, ca_sfista, spnm, ca_spnm,
+                        pdhg, ca_pdhg, bcd, ca_bcd)
 from repro.data import make_dataset_like
 from benchmarks.common import time_fn, emit
 
 KEY = jax.random.PRNGKey(0)
 
+SOLVERS = (("sfista", sfista), ("ca_sfista", ca_sfista),
+           ("spnm", spnm), ("ca_spnm", ca_spnm),
+           ("pdhg", pdhg), ("ca_pdhg", ca_pdhg),
+           ("bcd", bcd), ("ca_bcd", ca_bcd))
+
 
 def run():
     prob, _ = make_dataset_like("covtype", scale=0.1)
     cfg = SolverConfig(T=64, k=8, b=0.05)
-    for name, solver in (("sfista", sfista), ("ca_sfista", ca_sfista),
-                         ("spnm", spnm), ("ca_spnm", ca_spnm)):
+    for name, solver in SOLVERS:
         t = time_fn(lambda k: solver(prob, cfg, k), KEY, iters=3, warmup=1)
         emit(f"wallclock/{name}/T=64", t * 1e6,
              f"us_per_iter={t*1e6/cfg.T:.1f}")

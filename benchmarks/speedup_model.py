@@ -32,6 +32,11 @@ def run(datasets=("abalone", "covtype", "susy"),
                 s = cm.speedup(P, machine)
                 rows.append((ds, P, k, s))
                 emit(f"fig4-6/{ds}/P={P}/k={k}", 0.0, f"speedup={s:.2f}x")
+                # CA-BCD: latency/k but word volume *k — the model shows
+                # where the tradeoff stops paying (large k at small P)
+                sb = cm.speedup(P, machine, solver="bcd")
+                emit(f"fig4-6/bcd/{ds}/P={P}/k={k}", 0.0,
+                     f"speedup={sb:.2f}x")
     # headline: best speedup per dataset at its largest P (paper Fig. 6)
     for ds in datasets:
         best = max(s for d2, P, k, s in rows if d2 == ds)

@@ -1,6 +1,7 @@
-"""Distributed CA-SFISTA exactly as the paper runs it (Algorithm V): X
+"""Distributed CA solvers exactly as the paper runs them (Algorithm V): X
 column-partitioned over processors, per-processor sampling, one Gram
-all-reduce every k iterations. Runs on 8 simulated devices.
+all-reduce every k iterations — plus the PDHG and BCD pairs through the
+same shard_map path. Runs on 8 simulated devices.
 
   PYTHONPATH=src python examples/distributed_lasso.py
 """
@@ -30,7 +31,8 @@ def main():
     w_opt = solve_reference(problem)
     cfg = SolverConfig(T=128, k=16, b=0.05)
 
-    for alg in ("sfista", "ca_sfista", "spnm", "ca_spnm"):
+    for alg in ("sfista", "ca_sfista", "spnm", "ca_spnm",
+                "pdhg", "ca_pdhg", "bcd", "ca_bcd"):
         solve = make_distributed_solver(alg, mesh, cfg, problem.lam)
         w = solve(Xs, ys, jnp.zeros(problem.d), t, jax.random.PRNGKey(0))
         err = float(relative_solution_error(w, w_opt))

@@ -1,6 +1,6 @@
-"""Quickstart: solve a LASSO problem with the paper's four solvers and verify
-the communication-avoiding reformulation is a free lunch (same trajectory,
-k-fold fewer collectives).
+"""Quickstart: solve a LASSO problem with the full solver family (FISTA,
+PNM, PDHG, BCD — classical and communication-avoiding) and verify the CA
+reformulation is a free lunch (same trajectory, k-fold fewer collectives).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (SolverConfig, sfista, ca_sfista, spnm, ca_spnm,
+                        pdhg, ca_pdhg, bcd, ca_bcd,
                         solve_reference, relative_solution_error,
                         lasso_objective)
 from repro.core.cost_model import CostModel, MachineParams
@@ -29,7 +30,9 @@ def main():
 
     print(f"\nsolver          rel_err     objective   (T={cfg.T}, k={cfg.k}, b={cfg.b})")
     for name, solver in (("SFISTA", sfista), ("CA-SFISTA", ca_sfista),
-                         ("SPNM", spnm), ("CA-SPNM", ca_spnm)):
+                         ("SPNM", spnm), ("CA-SPNM", ca_spnm),
+                         ("PDHG", pdhg), ("CA-PDHG", ca_pdhg),
+                         ("BCD", bcd), ("CA-BCD", ca_bcd)):
         w = solver(problem, cfg, key)
         err = float(relative_solution_error(w, w_opt))
         obj = float(lasso_objective(problem, w))

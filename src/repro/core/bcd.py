@@ -1,0 +1,42 @@
+"""Stochastic block coordinate descent and its k-step CA form (CA-BCD).
+
+Where SFISTA/SPNM/PDHG sample *units* (data points) and update the full
+iterate, BCD samples *coordinates* of the iterate and updates only those —
+the primal-coordinate s-step method of arXiv 1612.04003 §3. Through
+``problem.coord_view()`` the same code runs the primal view (Lasso / elastic
+net: coordinates of w, residual v = X^T w - y) and the dual view (SVM:
+coordinates of the dual alpha over samples, CoCoA-style local-dual framing of
+arXiv 1512.04011 — the "units" become the features carried in v = Z alpha).
+
+Per outer block the ONE collective computes the stacked cross-Gram
+C = inv_rho * B[U] B[U]^T over the block's k coordinate draws plus the block
+gradient g0; the inner k updates replay classical BCD exactly by correcting
+each gradient with C_j @ delta (delta = in-block coordinate updates so far).
+At k=1 the correction is identically zero, so ``bcd`` and ``ca_bcd`` are the
+same arithmetic with T vs T/k collectives; for k>1 the replay is exact in
+real arithmetic and drifts only by float reassociation (tests bound it).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.problem import SolverConfig
+from repro.core import sstep
+
+
+def bcd(problem, cfg: SolverConfig, key: jax.Array,
+        w0=None, collect_history: bool = False):
+    """Stochastic proximal BCD: per iteration, draw a coordinate block of
+    size max(b*dim, 1) (without replacement), take one prox-gradient step on
+    those coordinates against the running residual. Returns w_T, or
+    (w_T, (T, dim) history) when collect_history."""
+    return sstep.solve(problem, cfg, key, sstep.BCD_RULE, name="bcd",
+                       ca=False, w0=w0, collect_history=collect_history)
+
+
+def ca_bcd(problem, cfg: SolverConfig, key: jax.Array,
+           w0=None, collect_history: bool = False):
+    """k-step BCD: one stacked cross-Gram collective per k coordinate
+    updates (arXiv 1612.04003 Alg. 2's s-step recurrence)."""
+    return sstep.solve(problem, cfg, key, sstep.BCD_RULE, name="ca_bcd",
+                       ca=True, w0=w0, collect_history=collect_history)

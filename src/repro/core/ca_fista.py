@@ -7,71 +7,22 @@ Structure per outer iteration i (T/k outer iterations):
 
 Arithmetic is identical to classical SFISTA given the same index draws — the
 same ``fista_update`` is applied to the same (G_j, R_j) sequence; only the
-*schedule* of the collective changes. tests/test_core.py asserts trajectories
-match to the last ulp, under every registry backend (the policy is resolved
-once per call and pinned for the whole trace — see ``core.fista``).
+*schedule* of the collective changes. Since both solvers are literally the
+same ``sstep.solve`` code path (classical = block size 1), this is true by
+construction; tests/test_core.py still asserts it numerically, under every
+registry backend.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.problem import LassoProblem, SolverConfig
-from repro.core.sampling import sample_index_batch
-from repro.core.gram import gram_blocks
-from repro.core.update_rules import init_state, fista_update
-from repro.core.fista import _resolve_step
-from repro.kernels import registry
+from repro.core.problem import SolverConfig
+from repro.core import sstep
 
 
-def validate_ca_config(cfg: SolverConfig, solver: str) -> None:
-    """CA solvers regroup the T draws into T/k blocks of k: T % k must be 0
-    (otherwise the reshape fails deep in jit with an opaque shape error)."""
-    if cfg.k < 1:
-        raise ValueError(f"{solver}: cfg.k must be >= 1, got k={cfg.k}")
-    if cfg.T % cfg.k != 0:
-        raise ValueError(
-            f"{solver}: cfg.T must be divisible by cfg.k (the k-step "
-            f"schedule runs T/k outer iterations of k updates each), got "
-            f"T={cfg.T}, k={cfg.k}. Pick T a multiple of k or k=1.")
-
-
-def ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+def ca_sfista(problem, cfg: SolverConfig, key: jax.Array,
               w0=None, collect_history: bool = False):
     """k-step SFISTA. Returns w_T (and optionally the (T, d) iterate
     history). Kernels follow the registry policy, resolved once per call."""
-    validate_ca_config(cfg, "ca_sfista")
-    resolved = registry.resolved_backend()
-    with registry.use(resolved):
-        return _ca_sfista(problem, cfg, key, w0, collect_history, resolved)
-
-
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
-def _ca_sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-               w0, collect_history: bool, backend: str):
-    d, n = problem.X.shape
-    m = max(int(cfg.b * n), 1)
-    t = _resolve_step(problem, cfg)
-    w0 = jnp.zeros((d,), problem.X.dtype) if w0 is None else w0
-    # Same draw sequence as the classical solver, regrouped into T/k blocks.
-    idx = sample_index_batch(key, cfg.T, n, m, cfg.with_replacement)
-    idx = idx.reshape(cfg.T // cfg.k, cfg.k, m)
-
-    def outer(state, idx_block):
-        # Paper Alg. III line 6-7: k Gram blocks, one (conceptual) broadcast.
-        G, R = gram_blocks(problem.X, problem.y, idx_block)
-
-        def inner(st, gr):
-            Gj, Rj = gr
-            new = fista_update(Gj, Rj, st, t, problem.lam)
-            return new, (new.w if collect_history else None)
-
-        state, hist = jax.lax.scan(inner, state, (G, R))
-        return state, hist
-
-    state, hist = jax.lax.scan(outer, init_state(w0), idx)
-    if collect_history:
-        return state.w, hist.reshape(cfg.T, d)
-    return state.w
+    return sstep.solve(problem, cfg, key, sstep.FISTA_RULE, name="ca_sfista",
+                       ca=True, w0=w0, collect_history=collect_history)

@@ -1,53 +1,17 @@
-"""CA-SPNM (paper Algorithm IV): k-step communication-avoiding proximal Newton."""
+"""CA-SPNM (paper Algorithm IV): k-step communication-avoiding proximal
+Newton — ``sstep.PNM_RULE`` under the k-step schedule."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.problem import LassoProblem, SolverConfig
-from repro.core.sampling import sample_index_batch
-from repro.core.gram import gram_blocks
-from repro.core.update_rules import init_state, pnm_update
-from repro.core.fista import _resolve_step
-from repro.core.ca_fista import validate_ca_config
-from repro.kernels import registry
+from repro.core.problem import SolverConfig
+from repro.core import sstep
 
 
-def ca_spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+def ca_spnm(problem, cfg: SolverConfig, key: jax.Array,
             w0=None, collect_history: bool = False):
     """k-step SPNM: k Gram blocks per collective; each block drives a
     Q-iteration inner ISTA solve executed redundantly with no communication.
     Kernels follow the registry policy, resolved once per call."""
-    validate_ca_config(cfg, "ca_spnm")
-    resolved = registry.resolved_backend()
-    with registry.use(resolved):
-        return _ca_spnm(problem, cfg, key, w0, collect_history, resolved)
-
-
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
-def _ca_spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-             w0, collect_history: bool, backend: str):
-    d, n = problem.X.shape
-    m = max(int(cfg.b * n), 1)
-    t = _resolve_step(problem, cfg)
-    w0 = jnp.zeros((d,), problem.X.dtype) if w0 is None else w0
-    idx = sample_index_batch(key, cfg.T, n, m, cfg.with_replacement)
-    idx = idx.reshape(cfg.T // cfg.k, cfg.k, m)
-
-    def outer(state, idx_block):
-        G, R = gram_blocks(problem.X, problem.y, idx_block)
-
-        def inner(st, gr):
-            Gj, Rj = gr
-            new = pnm_update(Gj, Rj, st, t, problem.lam, cfg.Q)
-            return new, (new.w if collect_history else None)
-
-        state, hist = jax.lax.scan(inner, state, (G, R))
-        return state, hist
-
-    state, hist = jax.lax.scan(outer, init_state(w0), idx)
-    if collect_history:
-        return state.w, hist.reshape(cfg.T, d)
-    return state.w
+    return sstep.solve(problem, cfg, key, sstep.PNM_RULE, name="ca_spnm",
+                       ca=True, w0=w0, collect_history=collect_history)

@@ -1,11 +1,10 @@
 """Classical SFISTA (paper Algorithm I) and a deterministic full-batch FISTA
 reference used as the convergence oracle.
 
-Backend selection: the public solver resolves the kernel-registry policy
-ONCE at call time, pins it for the trace (``with registry.use(backend)``) and
-passes the resolved name into the jitted body as a static argument — so the
-jit cache is keyed by backend and a policy change re-traces instead of
-silently reusing a stale executable.
+``sfista`` is the k=1 instantiation of the shared s-step core
+(:mod:`repro.core.sstep` + ``FISTA_RULE``): same sampling, same per-iteration
+``fista_update``, same backend pinning — the bespoke loop this module used to
+carry now lives once in ``sstep.solve`` for the whole solver family.
 """
 from __future__ import annotations
 
@@ -15,20 +14,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.problem import LassoProblem, SolverConfig, lipschitz_step
-from repro.core.sampling import sample_index_batch
-from repro.core.gram import sampled_gram
-from repro.core.update_rules import init_state, fista_update
 from repro.core.soft_threshold import soft_threshold, fista_momentum
-from repro.kernels import registry
+from repro.core import sstep
 
 
-def _resolve_step(problem: LassoProblem, cfg: SolverConfig):
-    if cfg.step_size is not None:
-        return jnp.asarray(cfg.step_size, problem.X.dtype)
-    return lipschitz_step(problem.X, cfg.power_iters)
+def _resolve_step(problem, cfg: SolverConfig):
+    return sstep._resolve_step(problem, cfg)
 
 
-def sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+def sfista(problem, cfg: SolverConfig, key: jax.Array,
            w0=None, collect_history: bool = False):
     """Stochastic FISTA: T iterations, one sampled-Gram + update per iteration.
 
@@ -36,29 +30,8 @@ def sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
     the communication bottleneck the CA variant removes (see ca_fista.py).
     Returns w_T, or (w_T, (k, d) iterate history) when collect_history.
     """
-    backend = registry.resolved_backend()
-    with registry.use(backend):
-        return _sfista(problem, cfg, key, w0, collect_history, backend)
-
-
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
-def _sfista(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-            w0, collect_history: bool, backend: str):
-    # ``backend`` keys the jit cache; dispatch resolves it from the policy
-    # the public wrapper pinned for this trace.
-    d, n = problem.X.shape
-    m = max(int(cfg.b * n), 1)
-    t = _resolve_step(problem, cfg)
-    w0 = jnp.zeros((d,), problem.X.dtype) if w0 is None else w0
-    idx = sample_index_batch(key, cfg.T, n, m, cfg.with_replacement)
-
-    def step(state, idx_j):
-        G, R = sampled_gram(problem.X, problem.y, idx_j)
-        new = fista_update(G, R, state, t, problem.lam)
-        return new, (new.w if collect_history else None)
-
-    state, hist = jax.lax.scan(step, init_state(w0), idx)
-    return (state.w, hist) if collect_history else state.w
+    return sstep.solve(problem, cfg, key, sstep.FISTA_RULE, name="sfista",
+                       ca=False, w0=w0, collect_history=collect_history)
 
 
 @partial(jax.jit, static_argnames=("iters",))

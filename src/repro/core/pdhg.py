@@ -1,0 +1,37 @@
+"""Stochastic PDHG and its k-step communication-avoiding form (CA-PDHG).
+
+Primal-dual hybrid gradient in the Loris-Verhoeven/PAPC arrangement (K = I)
+over the same sampled-Gram statistics as SFISTA: per iteration the primal
+takes a plain gradient half-step q = w - t (G_j w - R_j), the dual ascends
+through the Moreau-decomposed conjugate prox, and the primal is corrected by
+the new dual (see ``update_rules.pdhg_update``). Because the update consumes
+only (G_j, R_j) + O(dim) state — exactly FISTA's footprint — the paper's
+k-step regrouping of the Gram collective applies verbatim, giving the s-step
+primal-dual method of arXiv 1612.04003 §4 on sampled statistics.
+
+``sigma`` (dual step) comes from ``SolverConfig.sigma``; default 0.5/t. At
+sigma = 1/t and u_0 = 0 each iteration collapses exactly to the ISTA step
+prox_{t g}(q) — the oracle tests/test_sstep.py checks against.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.problem import SolverConfig
+from repro.core import sstep
+
+
+def pdhg(problem, cfg: SolverConfig, key: jax.Array,
+         w0=None, collect_history: bool = False):
+    """Stochastic PDHG: one sampled-Gram collective + primal-dual update per
+    iteration. Returns w_T, or (w_T, (T, dim) history) when collect_history."""
+    return sstep.solve(problem, cfg, key, sstep.PDHG_RULE, name="pdhg",
+                       ca=False, w0=w0, collect_history=collect_history)
+
+
+def ca_pdhg(problem, cfg: SolverConfig, key: jax.Array,
+            w0=None, collect_history: bool = False):
+    """k-step PDHG: k Gram blocks per collective, k communication-free
+    primal-dual updates — identical arithmetic to ``pdhg``, T/k collectives."""
+    return sstep.solve(problem, cfg, key, sstep.PDHG_RULE, name="ca_pdhg",
+                       ca=True, w0=w0, collect_history=collect_history)

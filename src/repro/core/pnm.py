@@ -1,42 +1,18 @@
-"""Classical stochastic proximal Newton method, SPNM (paper Algorithm II)."""
+"""Classical stochastic proximal Newton method, SPNM (paper Algorithm II).
+
+The k=1 instantiation of the shared s-step core (``sstep.PNM_RULE``)."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.problem import LassoProblem, SolverConfig
-from repro.core.sampling import sample_index_batch
-from repro.core.gram import sampled_gram
-from repro.core.update_rules import init_state, pnm_update
-from repro.core.fista import _resolve_step
-from repro.kernels import registry
+from repro.core.problem import SolverConfig
+from repro.core import sstep
 
 
-def spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
+def spnm(problem, cfg: SolverConfig, key: jax.Array,
          w0=None, collect_history: bool = False):
     """Stochastic proximal Newton: per iteration, sample a Gram block H_j and
     solve the quadratic subproblem with Q inner ISTA steps (warm-started).
     Kernels follow the registry policy, resolved once per call."""
-    backend = registry.resolved_backend()
-    with registry.use(backend):
-        return _spnm(problem, cfg, key, w0, collect_history, backend)
-
-
-@partial(jax.jit, static_argnames=("cfg", "collect_history", "backend"))
-def _spnm(problem: LassoProblem, cfg: SolverConfig, key: jax.Array,
-          w0, collect_history: bool, backend: str):
-    d, n = problem.X.shape
-    m = max(int(cfg.b * n), 1)
-    t = _resolve_step(problem, cfg)
-    w0 = jnp.zeros((d,), problem.X.dtype) if w0 is None else w0
-    idx = sample_index_batch(key, cfg.T, n, m, cfg.with_replacement)
-
-    def step(state, idx_j):
-        G, R = sampled_gram(problem.X, problem.y, idx_j)
-        new = pnm_update(G, R, state, t, problem.lam, cfg.Q)
-        return new, (new.w if collect_history else None)
-
-    state, hist = jax.lax.scan(step, init_state(w0), idx)
-    return (state.w, hist) if collect_history else state.w
+    return sstep.solve(problem, cfg, key, sstep.PNM_RULE, name="spnm",
+                       ca=False, w0=w0, collect_history=collect_history)

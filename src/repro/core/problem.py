@@ -1,25 +1,62 @@
-"""Problem and solver configuration for L1-regularized least squares (LASSO).
+"""Composite convex problems min_w f(w) + g(w) and the shared solver config.
 
-    min_w  f(w) + g(w),   f(w) = (1/2n) ||X^T w - y||^2,   g(w) = lam ||w||_1
+Every problem carries the same smooth/prox split the s-step core
+(``repro.core.sstep``) consumes:
 
-X is (d, n): rows are features, columns are samples (paper's convention, n >> d).
+* ``dim`` / ``n_units`` — iterate size and the number of sampleable units the
+  stochastic Gram estimator draws from (columns for the primal problems,
+  features for the dual SVM);
+* ``prox_params()`` — the element-wise prox of g as static metadata
+  ``(variant, lam, mu, lo, hi)``, dispatched into the fused ``prox_step`` /
+  ``prox_loop`` kernels;
+* ``gram_stats(idx)`` / ``full_stats()`` — sampled and full-batch curvature
+  statistics (G_j, R_j), the only way iterations touch the data (the linchpin
+  of the k-step reformulation);
+* ``coord_view()`` — the block-coordinate factorization used by BCD;
+* ``objective`` / ``default_step`` — full-batch objective and 1/L step size.
+
+Problems:
+
+  LassoProblem       f = (1/2n)||X^T w - y||^2            g = lam ||w||_1
+  ElasticNetProblem  f = (1/2n)||X^T w - y||^2            g = lam||w||_1 + (mu/2)||w||^2
+  DualSVMProblem     f = (1/2d) a^T Z^T Z a - (1/d) 1^T a g = 1_{[0, C]}(a)
+
+X is (d, n): rows are features, columns are samples (paper's convention,
+n >> d). The dual SVM iterates over a (n,) with Z = X * y (label-signed
+features); its smooth part is the standard SVM dual scaled by 1/d so that
+feature subsampling gives an unbiased Gram estimate with the same 1/m
+normalization the primal problems use.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class LassoProblem:
-    """The LASSO problem instance. X: (d, n) features x samples; y: (n,)."""
-    X: jax.Array
-    y: jax.Array
-    lam: float = dataclasses.field(metadata=dict(static=True), default=0.1)
+class CoordView(NamedTuple):
+    """Block-coordinate factorization consumed by the BCD solvers.
+
+    The smooth gradient restricted to a coordinate block U is
+
+        grad_U = inv_rho * (B[U] @ v - lin[U]),   v = B^T w - offset,
+
+    and the auxiliary residual v is maintained incrementally:
+    ``v += B[U]^T delta`` after the block update. B rows are coordinates of
+    the iterate; B columns (and v) live on the data axis, which is what makes
+    the distributed form data-parallel: B[U] @ v and B[U] @ B[U]^T reduce
+    over the sharded axis — the one collective per (outer) iteration.
+    """
+    B: jax.Array        # (dim, n_aux)
+    offset: jax.Array   # (n_aux,) — v = B^T w - offset
+    lin: jax.Array      # (dim,) linear term of the gradient
+    inv_rho: float      # gradient normalization (1/n primal, 1/d dual)
+
+
+class _CompositeProblem:
+    """Protocol mixin shared by the problem dataclasses below."""
 
     @property
     def d(self) -> int:
@@ -29,45 +66,191 @@ class LassoProblem:
     def n(self) -> int:
         return self.X.shape[1]
 
+    # --- s-step protocol (overridden where the defaults don't apply) ------
+    @property
+    def dim(self) -> int:
+        """Size of the iterate w."""
+        return self.d
+
+    @property
+    def n_units(self) -> int:
+        """Number of sampleable units for the stochastic Gram estimator."""
+        return self.n
+
+    def gram_stats(self, idx: jax.Array, m_norm=None):
+        """Sampled (G_j, R_j) for one index draw (primal default)."""
+        from repro.core.gram import sampled_gram
+        return sampled_gram(self.X, self.y, idx, m_norm=m_norm)
+
+    def full_stats(self):
+        """Full-batch (G, R): gradient of f is G w - R."""
+        return self.X @ self.X.T / self.n, self.X @ self.y / self.n
+
+    def coord_view(self) -> CoordView:
+        return CoordView(B=self.X, offset=self.y,
+                         lin=jnp.zeros((self.d,), self.X.dtype),
+                         inv_rho=1.0 / self.n)
+
+    def default_step(self, cfg: "SolverConfig"):
+        return lipschitz_step(self.X, cfg.power_iters)
+
+    def smooth_objective(self, w: jax.Array) -> jax.Array:
+        r = self.X.T @ w - self.y
+        return 0.5 / self.n * jnp.vdot(r, r)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LassoProblem(_CompositeProblem):
+    """The LASSO problem instance. X: (d, n) features x samples; y: (n,)."""
+    X: jax.Array
+    y: jax.Array
+    lam: float = dataclasses.field(metadata=dict(static=True), default=0.1)
+
+    def prox_params(self) -> Tuple[str, float, float, float, float]:
+        return ("l1", self.lam, 0.0, 0.0, 0.0)
+
+    def objective(self, w: jax.Array) -> jax.Array:
+        return self.smooth_objective(w) + self.lam * jnp.sum(jnp.abs(w))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ElasticNetProblem(_CompositeProblem):
+    """Elastic net: LASSO's smooth part, g = lam||w||_1 + (mu/2)||w||^2.
+
+    Same Gram statistics and Lipschitz constant as LASSO (the quadratic
+    penalty rides in the prox: S_{lam t}(x) / (1 + mu t)), so every s-step
+    solver runs unchanged with only the prox variant swapped.
+    """
+    X: jax.Array
+    y: jax.Array
+    lam: float = dataclasses.field(metadata=dict(static=True), default=0.1)
+    mu: float = dataclasses.field(metadata=dict(static=True), default=0.05)
+
+    def prox_params(self) -> Tuple[str, float, float, float, float]:
+        return ("elastic_net", self.lam, self.mu, 0.0, 0.0)
+
+    def objective(self, w: jax.Array) -> jax.Array:
+        return (self.smooth_objective(w) + self.lam * jnp.sum(jnp.abs(w))
+                + 0.5 * self.mu * jnp.vdot(w, w))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DualSVMProblem(_CompositeProblem):
+    """Soft-margin SVM dual (CoCoA-style dual framing, 1512.04011).
+
+    X: (d, n) features x samples; y: (n,) labels in {-1, +1}; box constraint
+    0 <= a_i <= C. With Z = X * y the (1/d)-scaled dual objective is
+
+        f(a) = (1/2d) ||Z a||^2 - (1/d) 1^T a,     g = indicator of [0, C]^n,
+
+    so grad f = G a - R with G = (1/d) Z^T Z, R = (1/d) 1. The stochastic
+    estimator samples FEATURES (rows of Z): G_j = (1/m) Z_S^T Z_S is unbiased
+    for G, and R is deterministic — the same (G_j, R_j) contract as the
+    primal problems, with units = features instead of samples.
+    """
+    X: jax.Array
+    y: jax.Array
+    C: float = dataclasses.field(metadata=dict(static=True), default=1.0)
+
+    @property
+    def Z(self) -> jax.Array:
+        return self.X * self.y[None, :]
+
+    @property
+    def dim(self) -> int:
+        return self.n            # dual iterate: one multiplier per sample
+
+    @property
+    def n_units(self) -> int:
+        return self.d            # Gram estimator samples features
+
+    def prox_params(self) -> Tuple[str, float, float, float, float]:
+        return ("box", 0.0, 0.0, 0.0, self.C)
+
+    def gram_stats(self, idx: jax.Array, m_norm=None):
+        from repro.kernels import registry
+        Bs = jnp.take(self.Z.T, idx, axis=1)          # (n, m) sampled features
+        m = idx.shape[0] if m_norm is None else m_norm
+        G = registry.dispatch("gram", Bs) * (1.0 / m)
+        R = jnp.full((self.n,), 1.0 / self.d, self.X.dtype)
+        return G, R
+
+    def full_stats(self):
+        Z = self.Z
+        return Z.T @ Z / self.d, jnp.full((self.n,), 1.0 / self.d,
+                                          self.X.dtype)
+
+    def coord_view(self) -> CoordView:
+        Z = self.Z
+        return CoordView(B=Z.T, offset=jnp.zeros((self.d,), self.X.dtype),
+                         lin=jnp.ones((self.n,), self.X.dtype),
+                         inv_rho=1.0 / self.d)
+
+    def default_step(self, cfg: "SolverConfig"):
+        # lipschitz_step(Z) targets eigmax(Z Z^T)/n; f's Hessian is
+        # (1/d) Z^T Z with the same top eigenvalue scaled by n/d
+        return lipschitz_step(self.Z, cfg.power_iters) * (self.d / self.n)
+
+    def smooth_objective(self, a: jax.Array) -> jax.Array:
+        v = self.Z @ a
+        return 0.5 / self.d * jnp.vdot(v, v) - jnp.sum(a) / self.d
+
+    def objective(self, a: jax.Array) -> jax.Array:
+        return self.smooth_objective(a)
+
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
-    """Solver hyper-parameters shared by all four algorithms.
+    """Solver hyper-parameters shared by all s-step algorithms.
 
     Attributes:
       T: total outer iterations (classical) / total effective iterations (CA).
       k: communication-avoiding step parameter; collectives fire every k iters.
         The CA solvers regroup the T draws into T/k blocks, so T must be a
-        multiple of k — validated here at construction AND with a clear
-        ValueError in ``ca_sfista``/``ca_spnm`` (which would otherwise fail
-        deep inside jit with an opaque reshape error). Classical solvers
+        multiple of k and k must be >= 1 — validated here at construction AND
+        (solver-named) in the shared s-step core, which would otherwise fail
+        deep inside jit with an opaque reshape error. Classical solvers
         ignore k.
-      b: sampling rate in (0, 1]; m = floor(b*n) columns drawn per iteration.
+      b: sampling rate in (0, 1]; m = floor(b*units) units drawn per
+        iteration (columns for the gram-schedule solvers, coordinates for
+        BCD).
       Q: inner first-order iterations for the proximal-Newton subproblem.
-      step_size: fixed step t; if None, 1/L with L = eigmax((1/n) X X^T) via
-        power iteration (computed once, outside the iteration loop).
+      step_size: fixed step t; if None, 1/L via power iteration (computed
+        once, outside the iteration loop).
+      sigma: PDHG dual step; if None, 0.5/t (sigma = 1/t makes PDHG collapse
+        to plain proximal gradient — used as a correctness oracle in tests).
       with_replacement: paper's I_j (i.i.d. uniform columns) samples with
-        replacement; kept as a flag for ablations.
+        replacement; kept as a flag for ablations. BCD always draws each
+        coordinate block without replacement (a repeated coordinate inside
+        one draw would double-apply its update).
     """
     T: int = 128
     k: int = 8
     b: float = 0.1
     Q: int = 5
     step_size: Optional[float] = None
+    sigma: Optional[float] = None
     with_replacement: bool = True
     power_iters: int = 50
 
     def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"cfg.k must be >= 1, got k={self.k}")
         if self.T % self.k != 0:
-            raise ValueError(f"T={self.T} must be a multiple of k={self.k}")
+            raise ValueError(
+                f"T={self.T} must be a multiple of k={self.k} (the k-step "
+                f"schedule runs T/k outer iterations of k updates each)")
         if not (0.0 < self.b <= 1.0):
             raise ValueError(f"sampling rate b={self.b} must be in (0, 1]")
 
 
-def lasso_objective(problem: LassoProblem, w: jax.Array) -> jax.Array:
-    """Full-batch objective F(w) = (1/2n)||X^T w - y||^2 + lam ||w||_1."""
-    r = problem.X.T @ w - problem.y
-    return 0.5 / problem.n * jnp.vdot(r, r) + problem.lam * jnp.sum(jnp.abs(w))
+def lasso_objective(problem, w: jax.Array) -> jax.Array:
+    """Full-batch objective F(w) (kept for back-compat; problems carry
+    ``objective`` themselves)."""
+    return problem.objective(w)
 
 
 def lipschitz_step(X: jax.Array, iters: int = 100, key=None,

@@ -15,6 +15,39 @@ def prox_grad_step(w: jax.Array, grad: jax.Array, t, lam) -> jax.Array:
     return soft_threshold(w - t * grad, lam * t)
 
 
+def prox_elem(x: jax.Array, step, variant: str = "l1", lam=0.0, mu=0.0,
+              lo=0.0, hi=0.0) -> jax.Array:
+    """Element-wise prox of the composite penalty g, evaluated at step size
+    ``step`` — the one formula shared by the solvers, the XLA reference
+    kernels, and the fused Pallas kernels (``variant`` is static):
+
+      l1           g = lam||.||_1                 S_{lam*step}(x)
+      elastic_net  g = lam||.||_1 + (mu/2)||.||^2 S_{lam*step}(x)/(1+mu*step)
+      box          g = indicator of [lo, hi]      clip(x, lo, hi)
+      none         g = 0                          x
+    """
+    if variant == "l1":
+        return soft_threshold(x, lam * step)
+    if variant == "elastic_net":
+        return soft_threshold(x, lam * step) / (1.0 + mu * step)
+    if variant == "box":
+        return jnp.clip(x, lo, hi)
+    if variant == "none":
+        return x
+    raise ValueError(f"unknown prox variant {variant!r}; expected one of "
+                     "('l1', 'elastic_net', 'box', 'none')")
+
+
+def moreau_dual_prox(x: jax.Array, sigma, variant: str = "l1", lam=0.0,
+                     mu=0.0, lo=0.0, hi=0.0) -> jax.Array:
+    """prox of sigma*g^* via the Moreau identity:
+    prox_{sigma g*}(x) = x - sigma * prox_{g/sigma}(x/sigma). Used by the
+    PDHG dual ascent step for every prox variant above."""
+    inv = 1.0 / sigma
+    return x - sigma * prox_elem(x * inv, inv, variant=variant, lam=lam,
+                                 mu=mu, lo=lo, hi=hi)
+
+
 def fista_momentum(j: jax.Array):
     """Paper's momentum coefficient (j-2)/j (eq. 9), zero-clamped for j < 2."""
     jf = j.astype(jnp.float32) if hasattr(j, "astype") else jnp.float32(j)

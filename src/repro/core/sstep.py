@@ -1,0 +1,315 @@
+"""The unified s-step solver core (paper Algorithms I-IV, one schedule).
+
+Every solver in the family — classical and communication-avoiding — is one
+instantiation of the same skeleton:
+
+  1. draw T index sets up front (``sample_index_batch``);
+  2. regroup them into T/k blocks of k (classical solvers are the k=1
+     instantiation of the SAME code path — there is no separate loop);
+  3. per outer block, compute the block's sampled statistics in ONE
+     collective (``gram_blocks`` for the gram schedule, the stacked
+     cross-Gram + gradient for the coordinate schedule);
+  4. ``lax.scan`` the per-iteration update rule over the block with no
+     further communication.
+
+Update rules plug in via :class:`UpdateRule`; the rules shipped here
+(``FISTA_RULE``, ``PNM_RULE``, ``PDHG_RULE``, ``BCD_RULE``) re-express the
+former bespoke solver loops (core/fista.py, core/ca_fista.py, core/pnm.py,
+core/ca_pnm.py) plus the two new pairs the ROADMAP calls for (s-step PDHG per
+1612.04003; primal/dual block coordinate descent per 1612.04003 with the
+CoCoA-style dual framing of 1512.04011).
+
+Two schedules:
+
+* ``gram`` — the update consumes (G_j, R_j) sampled-Gram statistics; k blocks
+  are batched into one ``gram_blocks`` evaluation (the paper's Alg. III
+  line 6: one all-reduce of k*(d^2+d) words instead of k of (d^2+d)).
+* ``coord`` — block coordinate descent: per outer block the collective is the
+  stacked cross-Gram C = inv_rho * B[U] B[U]^T over the k coordinate draws
+  plus the block gradient g0; the inner scan reconstructs each iteration's
+  gradient as g0_j + C_j @ delta (delta = coordinate updates applied so far
+  inside the block), which is algebraically identical to re-evaluating
+  against the running residual. At k=1 the correction term is exactly zero,
+  so the classical solver is again the k=1 instantiation.
+
+Backend policy is resolved ONCE per call and pinned for the trace (the jit
+cache is keyed by the resolved name), exactly like the historical solvers.
+
+``host_loop=True`` runs the outer loop on the host — one jit dispatch +
+``block_until_ready`` per block, bracketed by :func:`repro.obs.mark_dispatch`
+— so ``repro.obs.sync_audit`` can measure the paper's central claim
+empirically: the CA schedule performs exactly T/k host<->device round-trip
+epochs where the classical schedule performs T.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.problem import SolverConfig
+from repro.core.sampling import sample_index_batch
+from repro.core.soft_threshold import prox_elem
+from repro.core import update_rules as ur
+from repro.kernels import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRule:
+    """One solver's per-iteration rule, plugged into the shared schedule.
+
+    Hashable (functions compare by identity) so it rides as a static jit
+    argument; define rules at module scope. ``schedule`` picks the skeleton:
+    ``"gram"`` rules get (G_j, R_j) per iteration; ``"coord"`` marks the
+    block-coordinate skeleton (whose inner update is fixed — the per-problem
+    variation enters through ``problem.coord_view()`` / ``prox_params()``).
+    """
+    name: str
+    schedule: str                         # "gram" | "coord"
+    init: Optional[Callable] = None       # (problem, cfg, w0, t) -> state
+    step: Optional[Callable] = None       # (problem, cfg, t, (G, R), state) -> state
+    extract: Optional[Callable] = None    # state -> w
+
+
+def validate_schedule(cfg: SolverConfig, solver: str) -> None:
+    """The ONE shared T/k validation (formerly copy-pasted per CA solver as
+    ``validate_ca_config``): CA solvers regroup the T draws into T/k blocks
+    of k, so T % k must be 0 (otherwise the reshape fails deep in jit with an
+    opaque shape error). ``SolverConfig.__post_init__`` already enforces this
+    at construction; this re-check catches configs mutated past it and names
+    the solver."""
+    if cfg.k < 1:
+        raise ValueError(f"{solver}: cfg.k must be >= 1, got k={cfg.k}")
+    if cfg.T % cfg.k != 0:
+        raise ValueError(
+            f"{solver}: cfg.T must be divisible by cfg.k (the k-step "
+            f"schedule runs T/k outer iterations of k updates each), got "
+            f"T={cfg.T}, k={cfg.k}. Pick T a multiple of k or k=1.")
+
+
+def _resolve_step(problem, cfg: SolverConfig):
+    if cfg.step_size is not None:
+        return jnp.asarray(cfg.step_size, problem.X.dtype)
+    return problem.default_step(cfg)
+
+
+def _sample_blocks(problem, cfg: SolverConfig, key, rule: UpdateRule,
+                   block_size: int):
+    """All T index draws, regrouped into (T/block_size, block_size, m)."""
+    if rule.schedule == "coord":
+        # coordinate blocks always draw without replacement per draw: a
+        # repeated coordinate inside one draw would double-apply its update
+        units, wr = problem.dim, False
+    else:
+        units, wr = problem.n_units, cfg.with_replacement
+    m = max(int(cfg.b * units), 1)
+    idx = sample_index_batch(key, cfg.T, units, m, wr)
+    return idx.reshape(cfg.T // block_size, block_size, m)
+
+
+# ------------------------------------------------------------------------
+# per-block bodies (shared by the fully-jitted and the host-loop paths)
+# ------------------------------------------------------------------------
+
+def _gram_block(problem, cfg: SolverConfig, rule: UpdateRule, t,
+                collect_history: bool, state, idx_block):
+    """One outer iteration of the gram schedule: k sampled-Gram blocks in one
+    collective, then k communication-free updates."""
+    G, R = jax.vmap(problem.gram_stats)(idx_block)
+
+    def inner(st, gr):
+        new = rule.step(problem, cfg, t, gr, st)
+        return new, (rule.extract(new) if collect_history else None)
+
+    return jax.lax.scan(inner, state, (G, R))
+
+
+def _coord_block(problem, cfg: SolverConfig, t, collect_history: bool,
+                 state, idx_block):
+    """One outer iteration of the coordinate schedule (CA-BCD, 1612.04003).
+
+    The stacked cross-Gram C and block gradient g0 are the one collective;
+    the inner scan replays the k coordinate updates exactly, correcting each
+    iteration's gradient by C @ delta for the updates already applied inside
+    the block. At block_size=1 delta is identically zero and this is plain
+    BCD arithmetic.
+    """
+    w, v = state
+    view = problem.coord_view()
+    block_size, m_c = idx_block.shape
+    U = idx_block.reshape(-1)                      # (block_size * m_c,)
+    BU = jnp.take(view.B, U, axis=0)               # (bm, n_aux)
+    # THE collective: cross-Gram + block gradient, one all-reduce in the
+    # distributed form (see core/distributed.py)
+    C = registry.dispatch("gram", BU) * view.inv_rho
+    g0 = (BU @ v - jnp.take(view.lin, U)) * view.inv_rho
+    variant, lam, mu, lo, hi = problem.prox_params()
+
+    def inner(carry, jj):
+        w, delta = carry
+        start = jj * m_c
+        Uj = jax.lax.dynamic_slice_in_dim(U, start, m_c)
+        Cj = jax.lax.dynamic_slice_in_dim(C, start, m_c, axis=0)
+        gj = jax.lax.dynamic_slice_in_dim(g0, start, m_c)
+        grad = gj + Cj @ delta                     # exact replay of the
+        wU = jnp.take(w, Uj)                       # running-residual gradient
+        wU_new = prox_elem(wU - t * grad, t, variant=variant, lam=lam,
+                           mu=mu, lo=lo, hi=hi)
+        w = w.at[Uj].set(wU_new)
+        delta = jax.lax.dynamic_update_slice_in_dim(delta, wU_new - wU,
+                                                    start, axis=0)
+        return (w, delta), (w if collect_history else None)
+
+    (w, delta), hist = jax.lax.scan(inner, (w, jnp.zeros_like(U, w.dtype)),
+                                    jnp.arange(block_size))
+    v = v + BU.T @ delta                           # residual roll-forward
+    return (w, v), hist
+
+
+def _run_block(problem, cfg, rule, t, collect_history, state, idx_block):
+    if rule.schedule == "coord":
+        return _coord_block(problem, cfg, t, collect_history, state,
+                            idx_block)
+    return _gram_block(problem, cfg, rule, t, collect_history, state,
+                       idx_block)
+
+
+def _init_state(problem, cfg, rule: UpdateRule, w0, t):
+    if rule.schedule == "coord":
+        view = problem.coord_view()
+        return (w0, view.B.T @ w0 - view.offset)
+    return rule.init(problem, cfg, w0, t)
+
+
+def _extract(rule: UpdateRule, state):
+    return state[0] if rule.schedule == "coord" else rule.extract(state)
+
+
+# ------------------------------------------------------------------------
+# solve: the one entry point behind every solver in the family
+# ------------------------------------------------------------------------
+
+def solve(problem, cfg: SolverConfig, key, rule: UpdateRule, *, name: str,
+          ca: bool = False, w0=None, collect_history: bool = False,
+          host_loop: bool = False):
+    """Run ``rule`` under the s-step schedule.
+
+    ``ca=False`` is the classical solver: block size 1, a collective every
+    iteration. ``ca=True`` regroups into T/k blocks of cfg.k. Returns w_T, or
+    (w_T, (T, dim) iterate history) when ``collect_history``.
+
+    ``host_loop=True`` dispatches one jit call per outer block from the host
+    (sync-audit observable; no history support) — the empirical latency
+    schedule, where the fully-jitted default is the throughput path.
+    """
+    if ca:
+        validate_schedule(cfg, name)
+    block_size = cfg.k if ca else 1
+    backend = registry.resolved_backend()
+    with registry.use(backend):
+        if host_loop:
+            if collect_history:
+                raise ValueError(f"{name}: host_loop does not support "
+                                 "collect_history")
+            return _solve_host(problem, cfg, key, rule, block_size, w0,
+                               backend)
+        return _solve(problem, cfg, key, rule, block_size, w0,
+                      bool(collect_history), backend)
+
+
+@partial(jax.jit, static_argnames=("cfg", "rule", "block_size",
+                                   "collect_history", "backend"))
+def _solve(problem, cfg: SolverConfig, key, rule: UpdateRule,
+           block_size: int, w0, collect_history: bool, backend: str):
+    # ``backend`` keys the jit cache; dispatch resolves it from the policy
+    # the public wrapper pinned for this trace.
+    t = _resolve_step(problem, cfg)
+    w0 = jnp.zeros((problem.dim,), problem.X.dtype) if w0 is None else w0
+    idx = _sample_blocks(problem, cfg, key, rule, block_size)
+    state0 = _init_state(problem, cfg, rule, w0, t)
+
+    def outer(state, idx_block):
+        return _run_block(problem, cfg, rule, t, collect_history, state,
+                          idx_block)
+
+    state, hist = jax.lax.scan(outer, state0, idx)
+    w = _extract(rule, state)
+    if collect_history:
+        return w, hist.reshape(cfg.T, problem.dim)
+    return w
+
+
+@partial(jax.jit, static_argnames=("cfg", "rule", "block_size", "backend"))
+def _host_block(problem, cfg: SolverConfig, rule: UpdateRule,
+                block_size: int, backend: str, t, state, idx_block):
+    state, _ = _run_block(problem, cfg, rule, t, False, state, idx_block)
+    return state
+
+
+def _solve_host(problem, cfg: SolverConfig, key, rule: UpdateRule,
+                block_size: int, w0, backend: str):
+    """Host-driven outer loop: one dispatch + blocking fetch per block.
+
+    Each block is bracketed ``mark_dispatch`` -> jit -> ``block_until_ready``,
+    so an enclosing :func:`repro.obs.sync_audit` counts exactly one round-trip
+    epoch per collective block: T/k for the CA schedule, T for the classical
+    one — the paper's latency claim, measured at the jax boundary.
+    """
+    t = _resolve_step(problem, cfg)
+    w0 = jnp.zeros((problem.dim,), problem.X.dtype) if w0 is None else w0
+    idx = _sample_blocks(problem, cfg, key, rule, block_size)
+    state = _init_state(problem, cfg, rule, w0, t)
+    for i in range(cfg.T // block_size):
+        obs.mark_dispatch(f"sstep.{rule.name}")
+        state = _host_block(problem, cfg, rule, block_size, backend, t,
+                            state, idx[i])
+        state = jax.block_until_ready(state)
+    return _extract(rule, state)
+
+
+# ------------------------------------------------------------------------
+# the solver family's update rules
+# ------------------------------------------------------------------------
+
+def _fista_init(problem, cfg, w0, t):
+    return ur.init_state(w0)
+
+
+def _fista_step(problem, cfg, t, stats, state):
+    variant, lam, mu, lo, hi = problem.prox_params()
+    return ur.fista_update(stats[0], stats[1], state, t, lam,
+                           mu=mu, lo=lo, hi=hi, variant=variant)
+
+
+def _pnm_step(problem, cfg, t, stats, state):
+    variant, lam, mu, lo, hi = problem.prox_params()
+    return ur.pnm_update(stats[0], stats[1], state, t, lam, cfg.Q,
+                         mu=mu, lo=lo, hi=hi, variant=variant)
+
+
+def _pdhg_init(problem, cfg, w0, t):
+    return ur.init_pdhg_state(w0)
+
+
+def _pdhg_step(problem, cfg, t, stats, state):
+    variant, lam, mu, lo, hi = problem.prox_params()
+    sigma = (jnp.asarray(cfg.sigma, t.dtype) if cfg.sigma is not None
+             else 0.5 / t)
+    return ur.pdhg_update(stats[0], stats[1], state, t, sigma, lam,
+                          mu=mu, lo=lo, hi=hi, variant=variant)
+
+
+def _iter_w(state):
+    return state.w
+
+
+FISTA_RULE = UpdateRule("fista", "gram", _fista_init, _fista_step, _iter_w)
+PNM_RULE = UpdateRule("pnm", "gram", _fista_init, _pnm_step, _iter_w)
+PDHG_RULE = UpdateRule("pdhg", "gram", _pdhg_init, _pdhg_step, _iter_w)
+BCD_RULE = UpdateRule("bcd", "coord")
+
+RULES = {r.name: r for r in (FISTA_RULE, PNM_RULE, PDHG_RULE, BCD_RULE)}

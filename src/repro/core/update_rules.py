@@ -3,11 +3,16 @@
 CA and classical solvers call the *same* functions on (G_j, R_j) — this is what
 makes the k-step reformulation arithmetically identical to the classical
 algorithm (paper §IV-A), a property asserted bitwise in tests/test_core.py.
+``repro.core.sstep`` wraps these into :class:`~repro.core.sstep.UpdateRule`
+registrations; nothing here knows about the s-step schedule.
 
 The prox step dispatches through the kernel registry (ops ``prox_step`` /
 ``prox_loop``): the same update runs as fused Pallas kernels or as the XLA
 path depending on the process backend policy; CA-vs-classical parity holds
-under either because both solvers resolve the same policy.
+under either because both solvers resolve the same policy. The composite
+prox is parameterized by ``(variant, lam, mu, lo, hi)`` — each problem's
+``prox_params()`` — passed as static keywords so every problem family
+compiles its own branch-free prox kernel (see kernels/prox_step/ops.py).
 
 Note on gradient evaluation point: the paper's Algorithm I/III pseudocode is
 ambiguous (it writes grad at w_{j-1} but applies the step at v_j). We follow
@@ -21,7 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.soft_threshold import fista_momentum
+from repro.core.soft_threshold import fista_momentum, moreau_dual_prox
 from repro.kernels import registry
 
 
@@ -35,32 +40,72 @@ def init_state(w0: jax.Array) -> IterState:
     return IterState(w_prev=w0, w=w0, j=jnp.asarray(1, jnp.int32))
 
 
+class PdhgState(NamedTuple):
+    w: jax.Array        # primal iterate
+    u: jax.Array        # dual iterate (in the prox-conjugate's domain)
+    j: jax.Array
+
+
+def init_pdhg_state(w0: jax.Array) -> PdhgState:
+    return PdhgState(w=w0, u=jnp.zeros_like(w0), j=jnp.asarray(1, jnp.int32))
+
+
 def fista_update(G: jax.Array, R: jax.Array, state: IterState,
-                 t, lam) -> IterState:
+                 t, lam, mu=0.0, lo=0.0, hi=0.0,
+                 variant: str = "l1") -> IterState:
     """One FISTA step with sampled-Gram gradient:  (paper Alg. III lines 9-13)
 
         v   = w + (j-2)/j * (w - w_prev)
-        w+  = S_{lam*t}( v - t * (G v - R) )
+        w+  = prox_{t g}( v - t * (G v - R) )
     """
     mom = fista_momentum(state.j)
     v = state.w + mom * (state.w - state.w_prev)
-    w_new = registry.dispatch("prox_step", G, R, v, t, lam)
+    w_new = registry.dispatch("prox_step", G, R, v, t, lam,
+                              mu=mu, lo=lo, hi=hi, variant=variant)
     return IterState(w_prev=state.w, w=w_new, j=state.j + 1)
 
 
 def pnm_update(G: jax.Array, R: jax.Array, state: IterState,
-               t, lam, Q: int) -> IterState:
+               t, lam, Q: int, mu=0.0, lo=0.0, hi=0.0,
+               variant: str = "l1") -> IterState:
     """One proximal-Newton step (paper Alg. IV lines 9-17).
 
     The quadratic subproblem
-        argmin_z grad^T (z-w) + 1/2 (z-w)^T H (z-w) + lam ||z||_1,
+        argmin_z grad^T (z-w) + 1/2 (z-w)^T H (z-w) + g(z),
     with H = G_j and grad = G_j w - R_j, has subproblem gradient
-    grad + H(z - w) = G z - R, so Q inner ISTA iterations are
-        z <- S_{lam*t}( z - t (G z - R) ),   z_0 = w   (warm start).
+    grad + H(z - w) = G z - R, so Q inner prox-gradient iterations are
+        z <- prox_{t g}( z - t (G z - R) ),   z_0 = w   (warm start).
 
     Q rides as a kwarg: the custom-VJP wiring binds kwargs statically, so
     the fused pallas loop stays differentiable (a positional Q would become
     a traced primal and break reverse-mode through fori_loop).
     """
-    z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q=Q)
+    z = registry.dispatch("prox_loop", G, R, state.w, t, lam, Q=Q,
+                          mu=mu, lo=lo, hi=hi, variant=variant)
     return IterState(w_prev=state.w, w=z, j=state.j + 1)
+
+
+def pdhg_update(G: jax.Array, R: jax.Array, state: PdhgState,
+                t, sigma, lam, mu=0.0, lo=0.0, hi=0.0,
+                variant: str = "l1") -> PdhgState:
+    """One s-step PDHG iteration (Loris-Verhoeven / PAPC form, K = I).
+
+    For min_w f(w) + g(w) with sampled-Gram gradient grad f = G w - R:
+
+        q    = w - t * (G w - R)              # gradient half-step (fused)
+        wbar = q - t * u                      # primal extrapolation
+        u+   = prox_{sigma g*}( u + sigma * wbar )   # dual ascent (Moreau)
+        w+   = q - t * u+
+
+    With sigma = 1/t this collapses exactly to the proximal-gradient (ISTA)
+    step prox_{t g}(q) — the correctness oracle tests assert. Like FISTA's,
+    the update consumes only (G_j, R_j) + O(dim) state, so the k-step
+    regrouping of the Gram collective applies verbatim (1612.04003's s-step
+    primal-dual reformulation over the same sampled statistics).
+    """
+    q = registry.dispatch("prox_step", G, R, state.w, t, 0.0, variant="none")
+    wbar = q - t * state.u
+    u_new = moreau_dual_prox(state.u + sigma * wbar, sigma, variant=variant,
+                             lam=lam, mu=mu, lo=lo, hi=hi)
+    w_new = q - t * u_new
+    return PdhgState(w=w_new, u=u_new, j=state.j + 1)

@@ -6,11 +6,19 @@ VMEM-resident across the fused update(s) (per-call ``supports`` rejects
 d > VMEM_MAX_D), ``xla`` is the pure-jnp path that is bit-identical to the
 solvers' historical inline update.
 
+Both ops take the composite-prox parameterization ``(t, lam, mu, lo, hi)``
+plus a static ``variant`` keyword selecting the element-wise prox (``l1`` —
+the default and the historical behavior — ``elastic_net``, ``box``,
+``none``; see ref.py). Solver call sites pass ``variant`` (and the inert
+scalars) as KEYWORDS: the custom-VJP wiring binds kwargs statically, so each
+problem's prox compiles its own branch-free kernel and the recompute backward
+differentiates only the positional primals.
+
 Both pallas impls carry a recompute-based custom VJP that differentiates the
-soft-threshold subgradient of the *ref.py* path (``jax.vjp`` over the jnp
-oracle, which is arithmetically the same update) — the forward stays fused
-in VMEM, the backward is a couple of matvecs. Differentiated call sites must
-pass ``prox_loop``'s ``Q`` as a keyword: kwargs are bound statically by the
+prox subgradient of the *ref.py* path (``jax.vjp`` over the jnp oracle,
+which is arithmetically the same update) — the forward stays fused in VMEM,
+the backward is a couple of matvecs. Differentiated call sites must pass
+``prox_loop``'s ``Q`` as a keyword: kwargs are bound statically by the
 custom-VJP wiring, while a positional ``Q`` becomes a traced primal and
 ``fori_loop`` with a traced bound has no reverse-mode rule."""
 from __future__ import annotations
@@ -28,12 +36,12 @@ from repro.kernels.prox_step import ref as _ref
 VMEM_MAX_D = 1792
 
 
-def _prep(G, R, v, t, lam):
+def _prep(G, R, v, t, lam, mu=0.0, lo=0.0, hi=0.0):
     G = G.astype(jnp.float32)
     R = R.reshape(-1, 1).astype(jnp.float32)
     v = v.reshape(-1, 1).astype(jnp.float32)
-    scal = jnp.stack([jnp.asarray(t, jnp.float32),
-                      jnp.asarray(lam, jnp.float32)]).reshape(2, 1)
+    scal = jnp.stack([jnp.asarray(s, jnp.float32)
+                      for s in (t, lam, mu, lo, hi)]).reshape(5, 1)
     return G, R, v, scal
 
 
@@ -45,27 +53,33 @@ def _fits_vmem(G, *_args, **_kw) -> bool:
     return G.shape[0] <= VMEM_MAX_D
 
 
-def prox_step(G, R, v, t, lam, interpret: bool | None = None):
-    """w+ = S_{lam*t}(v - t*(G v - R)); accepts (d,) vectors."""
+def prox_step(G, R, v, t, lam, mu=0.0, lo=0.0, hi=0.0, *, variant="l1",
+              interpret: bool | None = None):
+    """w+ = prox(v - t*(G v - R)); accepts (d,) vectors."""
     if not _fits_vmem(G):
-        return _ref.prox_step(G, R, v, t, lam)
+        return _ref.prox_step(G, R, v, t, lam, mu, lo, hi, variant=variant)
     interpret = _interpret_default() if interpret is None else interpret
-    Gp, Rp, vp, scal = _prep(G, R, v, t, lam)
-    return _k.prox_step(Gp, Rp, vp, scal, interpret=interpret).reshape(v.shape)
+    Gp, Rp, vp, scal = _prep(G, R, v, t, lam, mu, lo, hi)
+    return _k.prox_step(Gp, Rp, vp, scal, variant=variant,
+                        interpret=interpret).reshape(v.shape)
 
 
-def prox_loop(G, R, z0, t, lam, Q: int, interpret: bool | None = None):
-    """z_Q from Q fused warm-started ISTA iterations; accepts (d,) vectors."""
+def prox_loop(G, R, z0, t, lam, Q: int, mu=0.0, lo=0.0, hi=0.0, *,
+              variant="l1", interpret: bool | None = None):
+    """z_Q from Q fused warm-started prox-gradient iterations; accepts (d,)
+    vectors."""
     if not _fits_vmem(G):
-        return _ref.prox_loop(G, R, z0, t, lam, Q)
+        return _ref.prox_loop(G, R, z0, t, lam, Q, mu, lo, hi,
+                              variant=variant)
     interpret = _interpret_default() if interpret is None else interpret
-    Gp, Rp, zp, scal = _prep(G, R, z0, t, lam)
-    return _k.prox_loop(Gp, Rp, zp, scal, Q=Q, interpret=interpret).reshape(z0.shape)
+    Gp, Rp, zp, scal = _prep(G, R, z0, t, lam, mu, lo, hi)
+    return _k.prox_loop(Gp, Rp, zp, scal, Q=Q, variant=variant,
+                        interpret=interpret).reshape(z0.shape)
 
 
 def _recompute_vjp(fused_fn, ref_fn):
     """(fwd, bwd) pair: pallas forward, backward = jax.vjp of the ref path
-    over the saved primal inputs (soft-threshold subgradient semantics)."""
+    over the saved primal inputs (prox subgradient semantics)."""
     def fwd(*args, **kw):
         return fused_fn(*args, **kw), args
 

@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for the fused proximal-step kernels."""
+"""Pure-jnp oracle for the fused proximal-step kernels.
+
+``variant`` selects the element-wise prox (static Python branch, mirrored
+exactly by the Pallas kernels): ``l1`` (default, the historical behavior),
+``elastic_net`` (S_{lam t}(x)/(1+mu t)), ``box`` (clip to [lo, hi]) and
+``none`` (plain gradient step — PDHG's primal half-step). The scalar
+parameters ``mu``/``lo``/``hi`` are inert for variants that ignore them, so
+all impls share one signature.
+"""
 import jax
 import jax.numpy as jnp
 
@@ -7,14 +15,28 @@ def _shrink(x, thresh):
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thresh, 0.0)
 
 
-def prox_step(G, R, v, t, lam):
-    """w+ = S_{lam*t}(v - t*(G v - R)): one fused FISTA interior update."""
-    return _shrink(v - t * (G @ v - R), lam * t)
+def _prox(x, t, lam, mu, lo, hi, variant):
+    if variant == "l1":
+        return _shrink(x, lam * t)
+    if variant == "elastic_net":
+        return _shrink(x, lam * t) / (1.0 + mu * t)
+    if variant == "box":
+        return jnp.clip(x, lo, hi)
+    if variant == "none":
+        return x
+    raise ValueError(f"unknown prox variant {variant!r}")
 
 
-def prox_loop(G, R, z0, t, lam, Q: int):
-    """Q warm-started ISTA iterations on the proximal-Newton subproblem —
-    the paper's redundant, communication-free inner solve (Alg. IV 13-16)."""
+def prox_step(G, R, v, t, lam, mu=0.0, lo=0.0, hi=0.0, variant="l1"):
+    """w+ = prox(v - t*(G v - R)): one fused composite-gradient update."""
+    return _prox(v - t * (G @ v - R), t, lam, mu, lo, hi, variant)
+
+
+def prox_loop(G, R, z0, t, lam, Q: int, mu=0.0, lo=0.0, hi=0.0,
+              variant="l1"):
+    """Q warm-started proximal-gradient iterations on the proximal-Newton
+    subproblem — the paper's redundant, communication-free inner solve
+    (Alg. IV 13-16)."""
     def body(q, z):
-        return _shrink(z - t * (G @ z - R), lam * t)
+        return _prox(z - t * (G @ z - R), t, lam, mu, lo, hi, variant)
     return jax.lax.fori_loop(0, Q, body, z0)

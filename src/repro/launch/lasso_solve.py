@@ -12,12 +12,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (SolverConfig, sfista, ca_sfista, spnm, ca_spnm,
+                        pdhg, ca_pdhg, bcd, ca_bcd,
                         solve_reference, relative_solution_error,
                         lasso_objective)
 from repro.core.cost_model import CostModel, MachineParams
 from repro.data import make_dataset_like
 
-SOLVERS = dict(sfista=sfista, ca_sfista=ca_sfista, spnm=spnm, ca_spnm=ca_spnm)
+SOLVERS = dict(sfista=sfista, ca_sfista=ca_sfista, spnm=spnm, ca_spnm=ca_spnm,
+               pdhg=pdhg, ca_pdhg=ca_pdhg, bcd=bcd, ca_bcd=ca_bcd)
 
 
 def main(argv=None):
@@ -73,9 +75,10 @@ def main(argv=None):
     nnz = int((jnp.abs(w) > 1e-6).sum())
     print(f"solution support: {nnz}/{problem.d}")
     cm = CostModel(d=problem.d, n=problem.n, b=args.b, T=iters, k=args.k)
+    cm_solver = "bcd" if args.algorithm.endswith("bcd") else "fista"
     for P in (64, 1024):
         print(f"  predicted CA speedup at P={P}: "
-              f"{cm.speedup(P, MachineParams.comet_like()):.2f}x")
+              f"{cm.speedup(P, MachineParams.comet_like(), solver=cm_solver):.2f}x")
     return w
 
 

@@ -34,7 +34,9 @@ def run_sub(code: str) -> str:
 
 
 @pytest.mark.parametrize("algs", [("sfista", "ca_sfista"),
-                                  ("spnm", "ca_spnm")])
+                                  ("spnm", "ca_spnm"),
+                                  ("pdhg", "ca_pdhg"),
+                                  ("bcd", "ca_bcd")])
 def test_distributed_ca_ulp_parity_inprocess(algs):
     """test_core's ulp-parity claim, extended to the sharded path: given the
     same per-shard sample draws, the k-step CA solver and the classical
@@ -56,7 +58,9 @@ def test_distributed_ca_ulp_parity_inprocess(algs):
     classical, ca = (
         np.asarray(make_distributed_solver(a, mesh, cfg, prob.lam)(
             Xs, ys, w0, t, key)) for a in algs)
-    np.testing.assert_allclose(ca, classical, atol=5e-6, rtol=0)
+    # bcd's in-block gradient replay reassociates a matvec (see core.sstep)
+    atol = 2e-5 if algs[0] == "bcd" else 5e-6
+    np.testing.assert_allclose(ca, classical, atol=atol, rtol=0)
     assert np.isfinite(classical).all()
 
 

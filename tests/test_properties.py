@@ -6,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 
 from repro.core.soft_threshold import soft_threshold, prox_grad_step, \
-    fista_momentum
+    fista_momentum, prox_elem, moreau_dual_prox
 from repro.core.cost_model import CostModel, MachineParams
 from repro.optim.compression import (topk_compress, topk_decompress,
                                      int8_compress, int8_decompress)
@@ -62,6 +62,78 @@ def test_prox_fixed_point_is_lasso_optimum():
     np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=2e-5)
 
 
+# --------------------------------------------------- composite prox family --
+_VARIANTS = st.sampled_from(["l1", "elastic_net", "box", "none"])
+
+
+def _prox_kwargs(variant, lam, mu, lo, hi):
+    lo, hi = min(lo, hi), max(lo, hi)
+    return dict(variant=variant, lam=lam, mu=mu, lo=lo, hi=hi)
+
+
+@given(floats, floats, st.floats(1e-3, 1.0), st.floats(0, 5), st.floats(0, 5),
+       st.floats(-3, 3, width=32), st.floats(-3, 3, width=32), _VARIANTS)
+def test_prox_elem_nonexpansive(x, y, t, lam, mu, lo, hi, variant):
+    """Every variant is the prox of a convex g, hence 1-Lipschitz
+    (elementwise, since all variants are separable)."""
+    kw = _prox_kwargs(variant, lam, mu, lo, hi)
+    xj, yj = jnp.asarray(x), jnp.asarray(np.resize(y, x.shape))
+    px = np.asarray(prox_elem(xj, t, **kw))
+    py = np.asarray(prox_elem(yj, t, **kw))
+    assert (np.abs(px - py) <= np.abs(x - np.resize(y, x.shape)) + 1e-5).all()
+
+
+@given(floats, floats, st.floats(1e-3, 1.0), st.floats(0, 5), st.floats(0, 5),
+       st.floats(-3, 3, width=32), st.floats(-3, 3, width=32), _VARIANTS)
+def test_prox_elem_is_subproblem_minimizer(v, w, t, lam, mu, lo, hi, variant):
+    """prox_{t g}(v) minimizes (1/2)||x-v||^2 + t g(x) — compare against any
+    other candidate point (here: w, projected into the domain for box)."""
+    kw = _prox_kwargs(variant, lam, mu, lo, hi)
+    v_ = jnp.asarray(v)
+    w_ = jnp.asarray(np.resize(w, v.shape))
+    if variant == "box":
+        w_ = jnp.clip(w_, kw["lo"], kw["hi"])   # candidate must be feasible
+
+    def g(x):
+        if variant == "l1":
+            return kw["lam"] * jnp.sum(jnp.abs(x))
+        if variant == "elastic_net":
+            return (kw["lam"] * jnp.sum(jnp.abs(x))
+                    + 0.5 * kw["mu"] * jnp.sum(x * x))
+        return 0.0   # box handled via feasibility; none has g = 0
+
+    def obj(x):
+        return 0.5 * jnp.sum((x - v_) ** 2) + t * g(x)
+
+    p = prox_elem(v_, t, **kw)
+    if variant == "box":
+        assert float(p.min()) >= kw["lo"] - 1e-6
+        assert float(p.max()) <= kw["hi"] + 1e-6
+    assert float(obj(p)) <= float(obj(w_)) + 1e-3
+
+
+@given(floats, st.floats(1e-2, 10.0), st.floats(0, 5))
+def test_moreau_dual_prox_l1_is_ball_projection(x, sigma, lam):
+    """For g = lam||.||_1 the conjugate prox is projection onto the
+    l-inf ball of radius lam, for ANY sigma (Moreau decomposition)."""
+    xj = jnp.asarray(x)
+    got = np.asarray(moreau_dual_prox(xj, sigma, variant="l1", lam=lam))
+    np.testing.assert_allclose(got, np.clip(x, -lam, lam), atol=1e-4)
+
+
+@given(floats, st.floats(1e-2, 10.0), st.floats(0.1, 5), st.floats(0.1, 5),
+       _VARIANTS)
+def test_moreau_identity(x, sigma, lam, mu, variant):
+    """prox_{sigma g*}(x) + sigma * prox_{g/sigma}(x/sigma) = x — the Moreau
+    decomposition every PDHG dual step relies on."""
+    kw = dict(variant=variant, lam=lam, mu=mu, lo=-lam, hi=lam)
+    xj = jnp.asarray(x)
+    dual = np.asarray(moreau_dual_prox(xj, sigma, **kw))
+    primal = np.asarray(prox_elem(xj / sigma, 1.0 / sigma, **kw))
+    np.testing.assert_allclose(dual + sigma * primal, x, atol=2e-4 * max(
+        1.0, float(np.abs(x).max())))
+
+
 # ------------------------------------------------------------- cost model --
 @given(st.integers(1, 1024), st.integers(1, 128))
 def test_cost_model_table1_invariants(P_, k):
@@ -75,6 +147,22 @@ def test_cost_model_table1_invariants(P_, k):
     np.testing.assert_allclose(
         cmk.memory(P_, ca=True),
         cm1.memory(P_, ca=True) + (k - 1) * 54 ** 2, rtol=1e-9)
+
+
+@given(st.integers(2, 1024), st.integers(1, 64))
+def test_cost_model_bcd_tradeoff(P_, k):
+    """CA-BCD: latency still drops k-fold, but the cross-Gram word volume
+    inflates (bounded by k) — the 1612.04003 tradeoff, distinct from the
+    gram-schedule rows asserted above."""
+    cm1 = CostModel(d=54, n=100_000, b=0.1, T=128, k=1)
+    cmk = CostModel(d=54, n=100_000, b=0.1, T=128, k=k)
+    np.testing.assert_allclose(cmk.messages(P_, ca=True, solver="bcd") * k,
+                               cm1.messages(P_, ca=True, solver="bcd"),
+                               rtol=1e-9)
+    w1 = cm1.words(P_, solver="bcd")
+    wk = cmk.words(P_, solver="bcd", ca=True)
+    assert w1 <= wk <= k * w1 + 1e-9
+    assert cmk.flops(P_, solver="bcd") == cm1.flops(P_, solver="bcd")
 
 
 @given(st.integers(2, 1024))
