@@ -35,6 +35,17 @@ bit-identical tokens while consuming at most half the prefill tokens, with
 the CA-k invariant (steps == syncs * k) intact on both runs. Rows record
 prefill tokens and mean resident requests per sync.
 
+The ``serve-capacity`` rows price the int8 page pool: two pools sized from
+the same byte budget, residents admitted (allocate + full-span reserve)
+until ``PageError`` — the quantized pool must hold >= 2x the resident
+requests of the f32 pool at matched bytes (an int8 page plus its f32
+row/head scales costs ~(Dh+4)/(2*Dh) of the bf16 page it replaces, and the
+page-granular remainder the f32 pool strands converts into whole spans).
+The ``serve-fanout`` rows drain one n=4 request against 4 separate
+admissions carrying the derived ``fold_in_seed`` seeds: token streams must
+match bitwise, at no extra syncs and a strictly lower page high-water mark
+(the siblings share the prompt's whole pages by refcount).
+
 Observability gates (``repro.obs``): every compile drain runs under
 ``obs.sync_audit()`` and asserts the audited host round-trip epochs equal
 ``EngineStats.syncs`` bitwise — the engine's bookkeeping checked against
@@ -55,7 +66,9 @@ from benchmarks.common import emit
 from repro import obs
 from repro.configs import get_arch, smoke_config
 from repro.models import init_params
-from repro.serve import Engine, Request, SamplingParams
+from repro.serve import (Engine, PagedCachePool, PageError, Request,
+                         SamplingParams)
+from repro.serve.sampling import fold_in_seed
 
 ARCH = "internlm2-1.8b"
 NEW_TOKENS = 64
@@ -157,6 +170,105 @@ def _prefix_sweep(cfg, params, slots=4, k=4):
              f"prefix_tokens={s.prefix_tokens};cow_copies={s.cow_copies}")
 
 
+CAP_PAGE = 4
+CAP_MAX_LEN = 32
+
+
+def _capacity_sweep(cfg):
+    """Matched-byte resident capacity: f32 vs int8 page pools.
+
+    Host-bookkeeping only (no device arrays): admit residents — allocate a
+    slot, reserve the full max_len span — until the pool raises PageError.
+    Both pools are sized from the same byte budget (2.5 f32 request-spans:
+    enough that page granularity strands the f32 remainder while the
+    ~half-cost int8 pages convert it into whole spans); the >= 2x gate is
+    the PR's capacity claim asserted in-process."""
+    span = PagedCachePool(cfg, 1, CAP_MAX_LEN, page_size=CAP_PAGE)
+    span_q = PagedCachePool(cfg, 1, CAP_MAX_LEN, page_size=CAP_PAGE,
+                            kv_dtype="int8")
+    budget = int(2.5 * span.pages_per_slot) * span.page_bytes()
+
+    def residents(kv_dtype, page_bytes):
+        pool = PagedCachePool(cfg, 64, CAP_MAX_LEN, page_size=CAP_PAGE,
+                              kv_dtype=kv_dtype,
+                              num_pages=1 + budget // page_bytes)
+        count = 0
+        try:
+            while True:
+                slot = pool.allocate(f"r{count}")
+                pool.reserve(slot, CAP_MAX_LEN)
+                count += 1
+        except PageError:
+            pass
+        return count, pool
+
+    n_f32, pool_f = residents("f32", span.page_bytes())
+    n_int8, pool_q = residents("int8", span_q.page_bytes())
+    assert n_int8 >= 2 * n_f32, \
+        f"int8 pool fits {n_int8} residents vs f32 {n_f32} " \
+        f"at {budget} matched bytes (need >= 2x)"
+    for tag, n, pool, pb in (("f32", n_f32, pool_f, span.page_bytes()),
+                             ("int8", n_int8, pool_q, span_q.page_bytes())):
+        emit(f"serve-capacity/{cfg.name}/kv={tag}", float(n),
+             f"resident_requests={n};pool_bytes={budget};"
+             f"page_bytes={pb};num_pages={pool.num_pages}",
+             metrics=dict(resident_requests=n, pool_bytes=budget,
+                          page_bytes=pb))
+
+
+FAN_PROMPT = 16
+FAN_PAGE = 4
+FAN_NEW = 16
+FAN_N = 4
+
+
+def _fanout_sweep(cfg, params, k=4):
+    """One n=4 fan-out vs 4 separate admissions with the derived seeds."""
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(0, cfg.vocab, size=FAN_PROMPT).tolist()
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=11)
+
+    def drain(reqs):
+        eng = Engine(params, cfg, num_slots=FAN_N,
+                     max_len=FAN_PROMPT + FAN_NEW + 8, k=k,
+                     max_prompt=FAN_PROMPT + 1, page_size=FAN_PAGE)
+        t0 = time.perf_counter()
+        out = eng.run(reqs)
+        return time.perf_counter() - t0, eng.stats, out
+
+    dt_f, s_f, out_f = drain([Request(id="fan", prompt=prompt,
+                                      max_new_tokens=FAN_NEW, sampling=sp,
+                                      n=FAN_N)])
+    dt_s, s_s, out_s = drain([
+        Request(id=f"sep{i}", prompt=prompt, max_new_tokens=FAN_NEW,
+                sampling=dataclasses.replace(sp, seed=fold_in_seed(11, i)))
+        for i in range(FAN_N)])
+    # the determinism contract, end to end: stream i of the fan-out IS the
+    # standalone request carrying fold_in_seed(base, i), bit for bit
+    fan = {r.stream: list(r.tokens) for r in out_f}
+    sep = {int(r.id[3:]): list(r.tokens) for r in out_s}
+    assert fan == sep, "fan-out streams diverged from separate admissions"
+    assert s_f.syncs <= s_s.syncs, \
+        f"fan-out added syncs ({s_f.syncs} vs {s_s.syncs})"
+    # residency is what fan-out buys: the prompt's whole pages are mapped
+    # once and shared, so the page high-water mark drops
+    shared = (FAN_N - 1) * (FAN_PROMPT // FAN_PAGE)
+    assert s_f.shared_prompt_pages == shared, s_f.shared_prompt_pages
+    assert s_f.peak_live_pages + shared <= s_s.peak_live_pages, \
+        f"fan-out page high-water {s_f.peak_live_pages} vs " \
+        f"separate {s_s.peak_live_pages}"
+    for tag, dt, s in (("fanout", dt_f, s_f), ("separate", dt_s, s_s)):
+        emit(f"serve-fanout/{cfg.name}/k={k},n={FAN_N},mode={tag}",
+             dt / s.steps * 1e6,
+             f"syncs={s.syncs};prefill_tokens={s.prefill_tokens};"
+             f"peak_live_pages={s.peak_live_pages};"
+             f"shared_prompt_pages={s.shared_prompt_pages};"
+             f"tokens_out={s.tokens_out}",
+             metrics=dict(syncs=s.syncs, prefill_tokens=s.prefill_tokens,
+                          peak_live_pages=s.peak_live_pages,
+                          shared_prompt_pages=s.shared_prompt_pages))
+
+
 def _disabled_overhead_guard(us_per_sync: float, iters: int = 20_000):
     """The acceptance gate on zero-overhead-when-disabled: time the full
     per-round instrumentation bundle the engine executes with obs off (one
@@ -246,6 +358,8 @@ def run():
                  f"host_blocked_us={blocked_us:.0f};"
                  f"host_blocked_us_blocking_engine={base_us:.0f}")
     _prefix_sweep(cfg, params)
+    _capacity_sweep(cfg)
+    _fanout_sweep(cfg, params)
     _disabled_overhead_guard(us_per_sync_k1)
 
 

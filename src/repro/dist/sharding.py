@@ -220,6 +220,12 @@ def _cache_leaf_spec(path, shape: Tuple[int, ...], rules: Rules) -> P:
     if name in ("k", "v", "ssm") and nd >= 4:
         entries[nd - 4] = rules.dp
         entries[nd - 3] = rules.tp
+    elif name in ("k_scale", "v_scale") and nd >= 3:
+        # int8-pool scale leaf = its parent minus the trailing head_dim, so
+        # the same positional rule one axis left: pages@dp, page rows@tp —
+        # a page's codes and its scales land on the same shard
+        entries[nd - 3] = rules.dp
+        entries[nd - 2] = rules.tp
     elif name == "conv" and nd >= 3:
         entries[nd - 3] = rules.dp
     return fit_spec(P(*entries), shape, rules.mesh)

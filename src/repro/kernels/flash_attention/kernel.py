@@ -90,9 +90,9 @@ def _flash_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
                 **kw)
 
 
-def _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
-                acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
-                rows: int, pages: int):
+def _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                o_ref, acc_ref, m_ref, l_ref, *, scale: float,
+                page_size: int, rows: int, pages: int):
     del table_ref                            # consumed by the index maps
     b = pl.program_id(0)
     ik = pl.program_id(2)
@@ -112,6 +112,10 @@ def _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0].astype(jnp.float32)                  # (1, d)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (rows, d)
+        if ks_ref is not None:
+            # int8 pool: per-(row, head) dequant rides the same
+            # scalar-prefetched page address as the codes it scales
+            k = k * ks_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         j = jax.lax.broadcasted_iota(jnp.int32, (1, rows), 1)
@@ -125,8 +129,10 @@ def _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
         p = jnp.exp(s - m_new)                            # (1, rows)
         l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
         m_ref[...] = m_new
-        pv = jax.lax.dot_general(p, v_ref[0, :, 0].astype(jnp.float32),
-                                 (((1,), (0,)), ((), ())),
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if vs_ref is not None:
+            v = v * vs_ref[0, :, 0][:, None]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         acc_ref[...] = acc_ref[...] * alpha + pv
 
@@ -136,10 +142,23 @@ def _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_kernel(table_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, **kw):
+    _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, None, None,
+                o_ref, acc_ref, m_ref, l_ref, **kw)
+
+
+def _paged_kernel_quant(table_ref, valid_ref, q_ref, k_ref, v_ref, ks_ref,
+                        vs_ref, o_ref, acc_ref, m_ref, l_ref, **kw):
+    _paged_body(table_ref, valid_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                o_ref, acc_ref, m_ref, l_ref, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "page_size",
                                              "interpret"))
-def paged_flash_decode(q, k_pool, v_pool, table, valid, *, scale: float,
-                       page_size: int, interpret: bool = True):
+def paged_flash_decode(q, k_pool, v_pool, table, valid, k_scale=None,
+                       v_scale=None, *, scale: float, page_size: int,
+                       interpret: bool = True):
     """Decode attention through a scalar-prefetched page table.
 
     q (B,Hq,D); pools (num_pages, rows, Hkv, D) with rows >= page_size
@@ -147,25 +166,38 @@ def paged_flash_decode(q, k_pool, v_pool, table, valid, *, scale: float,
     valid vector ride the scalar-prefetch lane so the k/v BlockSpec index
     maps can compute HBM page addresses before the body runs — the gather
     never materialises in HBM.
+
+    Quantized pools additionally pass ``k_scale``/``v_scale``
+    (num_pages, rows, Hkv) f32; the scale tiles ride the same prefetched
+    page addresses and dequantization happens in-register before the MXU.
     """
     B, Hq, D = q.shape
     rows, Hkv = k_pool.shape[1], k_pool.shape[2]
     group = Hq // Hkv
     npages = table.shape[1]
+    quant = k_scale is not None
 
-    kernel = functools.partial(_paged_body, scale=scale, page_size=page_size,
+    body = _paged_kernel_quant if quant else _paged_kernel
+    kernel = functools.partial(body, scale=scale, page_size=page_size,
                                rows=rows, pages=npages)
     # index maps receive (*grid_indices, *scalar_prefetch_refs)
     kv_spec = pl.BlockSpec(
         (1, rows, 1, D), lambda b, h, ik, t, n: (t[b, ik], 0, h // group, 0))
+    scale_spec = pl.BlockSpec(
+        (1, rows, 1), lambda b, h, ik, t, n: (t[b, ik], 0, h // group))
+    in_specs = [
+        pl.BlockSpec((1, 1, D), lambda b, h, ik, t, n: (b, h, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hq, npages),
-        in_specs=[
-            pl.BlockSpec((1, 1, D), lambda b, h, ik, t, n: (b, h, 0)),
-            kv_spec,
-            kv_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ik, t, n: (b, h, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, D), jnp.float32),    # acc
@@ -178,7 +210,7 @@ def paged_flash_decode(q, k_pool, v_pool, table, valid, *, scale: float,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
         interpret=interpret,
-    )(table, valid, q, k_pool, v_pool)
+    )(table, valid, *operands)
 
 
 @functools.partial(jax.jit, static_argnames=(

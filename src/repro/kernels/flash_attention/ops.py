@@ -116,6 +116,7 @@ def flash_attention_bwd(res, do, *, causal: bool = True,
 
 
 def paged_flash_decode(q, k_pool, v_pool, page_table, kv_valid_len, *,
+                       k_scale=None, v_scale=None,
                        scale: float | None = None,
                        interpret: bool | None = None):
     """Decode attention over a paged KV pool, model layout.
@@ -124,6 +125,9 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, kv_valid_len, *,
     (B, npages) int32; kv_valid_len scalar or (B,) int32 -> (B,1,Hq,D).
     Pads head dim to the 128-lane boundary and the page rows to the sublane
     multiple (the kernel masks pad rows with the logical ``page_size``).
+    ``k_scale``/``v_scale`` (num_pages, page_size, Hkv) f32 switch the
+    kernel to the int8-dequantizing body (pad rows carry scale 0 — they are
+    masked before the softmax either way).
     """
     B, S, Hq, D = q.shape
     if S != 1:
@@ -131,6 +135,8 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, kv_valid_len, *,
     P, Hkv = k_pool.shape[1], k_pool.shape[2]
     if Hq % Hkv:
         raise ValueError(f"GQA requires Hq % Hkv == 0, got {Hq=} {Hkv=}")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
     scale = (D ** -0.5) if scale is None else scale
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -139,10 +145,13 @@ def paged_flash_decode(q, k_pool, v_pool, page_table, kv_valid_len, *,
     qp = pad.pad_dims(q[:, 0], {2: Dp})
     kp = pad.pad_dims(k_pool, {1: rows, 3: Dp})
     vp = pad.pad_dims(v_pool, {1: rows, 3: Dp})
+    ksp = None if k_scale is None else pad.pad_dims(k_scale, {1: rows})
+    vsp = None if v_scale is None else pad.pad_dims(v_scale, {1: rows})
     table = jnp.asarray(page_table, jnp.int32)
     valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (B,))
-    out = _k.paged_flash_decode(qp, kp, vp, table, valid, scale=scale,
-                                page_size=P, interpret=interpret)
+    out = _k.paged_flash_decode(qp, kp, vp, table, valid, ksp, vsp,
+                                scale=scale, page_size=P,
+                                interpret=interpret)
     return pad.unpad_dims(out, {2: D})[:, None]
 
 

@@ -16,6 +16,11 @@ Sampling: ``--temperature/--top-p/--top-k/--sample-seed`` attach a
 ``--stream`` switches the drain to ``Engine.stream`` and prints each
 request's token deltas as k-blocks retire — tokens surface with one block
 of latency, at the same one-sync-per-k-tokens schedule.
+
+Paged extras: ``--kv-dtype int8`` stores pageable K/V as int8 codes with
+f32 row/head scales (about double the resident capacity at the same pool
+bytes); ``--n`` fans every synthetic request into n sampled streams that
+share its prompt pages, each stream seeded with ``fold_in_seed(seed, i)``.
 """
 from __future__ import annotations
 
@@ -40,7 +45,8 @@ from repro.serve import Engine, Request, SamplingParams
 
 
 def _synthetic_requests(cfg, n: int, max_prompt: int, new_tokens: int,
-                        enc_len: int, seed: int = 0, sampling=None):
+                        enc_len: int, seed: int = 0, sampling=None,
+                        fanout: int = 1):
     rng = np.random.RandomState(seed)
     reqs = []
     for i in range(n):
@@ -54,7 +60,7 @@ def _synthetic_requests(cfg, n: int, max_prompt: int, new_tokens: int,
             sp = dataclasses.replace(sampling, seed=(sampling.seed or 0) + i)
         reqs.append(Request(id=f"req-{i}", prompt=prompt,
                             max_new_tokens=new_tokens, enc_embeds=enc,
-                            sampling=sp))
+                            sampling=sp, n=fanout))
     return reqs
 
 
@@ -96,11 +102,13 @@ def serve_engine(cfg, rules, args):
                     max_prompt=min(16, args.max_len // 2),
                     enc_len=args.max_len if cfg.family == "audio" else None,
                     page_size=args.page_size or None,
+                    kv_dtype=args.kv_dtype,
                     prefix_cache=args.prefix_cache,
                     overlap=args.overlap)
     reqs = _synthetic_requests(cfg, args.requests or 2 * args.batch,
                                min(16, args.max_len // 2), args.new_tokens,
-                               args.max_len, sampling=_cli_sampling(args))
+                               args.max_len, sampling=_cli_sampling(args),
+                               fanout=args.n)
     if args.stream:
         print(f"arch={cfg.name} engine=on stream=on slots={args.batch} "
               f"k={args.k} requests={len(reqs)} "
@@ -132,6 +140,8 @@ def serve_engine(cfg, rules, args):
     if engine.paged:
         print(f"paged: page_size={engine.pool.page_size} "
               f"pages={engine.pool.num_pages} "
+              f"kv_dtype={'int8' if engine.pool.quantized else 'f32'} "
+              f"page_bytes={engine.pool.page_bytes()} "
               f"prefix_hits={s.prefix_hits} prefix_tokens={s.prefix_tokens} "
               f"cow_copies={s.cow_copies} page_defrags={s.page_defrags}")
     for r in sorted(responses, key=lambda r: r.id)[:2]:
@@ -207,6 +217,14 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=0,
                     help="engine mode: tokens per KV page (0 = whole-row "
                          "slot cache; token streams identical either way)")
+    ap.add_argument("--kv-dtype", choices=["f32", "int8"], default="f32",
+                    help="engine mode, with --page-size: int8 stores "
+                         "pageable K/V as int8 codes + f32 row/head scales "
+                         "(~2x resident capacity at matched pool bytes)")
+    ap.add_argument("--n", type=int, default=1,
+                    help="engine mode: fan each synthetic request into n "
+                         "sampled streams sharing its prompt pages (stream "
+                         "i seeds with fold_in_seed(seed, i))")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="engine mode, with --page-size: reuse radix-trie "
                          "shared prompt-prefix pages across requests and "

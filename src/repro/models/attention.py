@@ -217,8 +217,24 @@ def _fa_bwd_candidates(backend, shape):
             for bk in (32, 128, 512)]
 
 
+def quantize_kv(x):
+    """Symmetric per-(row, head) int8 quantization over head_dim.
+
+    x (..., D) -> ``(q, scale)``: int8 codes plus the f32 absmax/127 scale
+    with the trailing axis reduced — the layout of the paged pool's
+    ``k_scale``/``v_scale`` leaves. All-zero rows get scale 1.0 so
+    dequantization of never-written pool rows stays exactly 0.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
 def paged_attention(q, k_pool, v_pool, page_table, kv_valid_len, *,
-                    scale=None, chunk: Optional[int] = None, interpret=None):
+                    k_scale=None, v_scale=None, scale=None,
+                    chunk: Optional[int] = None, interpret=None):
     """Backend-dispatched decode attention over a paged KV pool.
 
     q (B,1,Hq,D); pools (num_pages, page_size, Hkv, D); page_table
@@ -228,6 +244,12 @@ def paged_attention(q, k_pool, v_pool, page_table, kv_valid_len, *,
     the serve layer's scratch page — are masked out exactly (finite values,
     zero weight), so pool garbage never perturbs the output.
 
+    Quantized pools pass int8 K/V plus ``k_scale``/``v_scale``
+    (num_pages, page_size, Hkv) f32; both impls dequantize on read
+    (``x = int8 * scale``), so the score/output math runs in the same
+    precision as the f32 path and the only error is the per-row rounding
+    bounded by ``scale/2 = absmax/254`` per element.
+
     The xla impl gathers the table into dense rows and reuses
     :func:`chunked_attention` — bitwise the slot-engine decode path. The
     pallas impl (decode-only, S == 1) indexes the pool directly through a
@@ -235,17 +257,23 @@ def paged_attention(q, k_pool, v_pool, page_table, kv_valid_len, *,
     """
     return registry.dispatch(
         "paged_attention", q, k_pool, v_pool, page_table, kv_valid_len,
-        scale=scale, chunk=chunk, interpret=interpret)
+        k_scale=k_scale, v_scale=v_scale, scale=scale, chunk=chunk,
+        interpret=interpret)
 
 
 def _paged_attention_xla(q, k_pool, v_pool, page_table, kv_valid_len, *,
-                         scale=None, chunk: Optional[int] = None,
-                         interpret=None):
+                         k_scale=None, v_scale=None, scale=None,
+                         chunk: Optional[int] = None, interpret=None):
     del interpret                                  # pallas-only knob
     B = q.shape[0]
     Hkv, D = k_pool.shape[2], k_pool.shape[3]
     k = k_pool[page_table].reshape(B, -1, Hkv, D)
     v = v_pool[page_table].reshape(B, -1, Hkv, D)
+    if k_scale is not None:
+        ks = k_scale[page_table].reshape(B, -1, Hkv)
+        vs = v_scale[page_table].reshape(B, -1, Hkv)
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     # decode reads are right-aligned single queries: causal=False + the
     # per-row kv_valid mask is the exact slot-engine semantics
     return chunked_attention(q, k, v, causal=False,
@@ -254,11 +282,12 @@ def _paged_attention_xla(q, k_pool, v_pool, page_table, kv_valid_len, *,
 
 
 def _paged_attention_pallas(q, k_pool, v_pool, page_table, kv_valid_len, *,
-                            scale=None, chunk: Optional[int] = None,
-                            interpret=None):
+                            k_scale=None, v_scale=None, scale=None,
+                            chunk: Optional[int] = None, interpret=None):
     del chunk                                      # xla-only knob
     return _fa_ops.paged_flash_decode(q, k_pool, v_pool, page_table,
-                                      kv_valid_len, scale=scale,
+                                      kv_valid_len, k_scale=k_scale,
+                                      v_scale=v_scale, scale=scale,
                                       interpret=interpret)
 
 

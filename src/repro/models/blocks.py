@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (rms_norm, apply_rope, apply_mrope, dense_init)
-from repro.models.attention import attention, paged_attention
+from repro.models.attention import attention, paged_attention, quantize_kv
 from repro.models.mlp import init_swiglu, swiglu
 from repro.models.moe import init_moe, moe_ffn
 
@@ -119,11 +119,25 @@ def attn_forward(params, x, *, n_heads: int, n_kv: int, head_dim: int,
         pidx = jnp.take_along_axis(page_table, cache_pos[:, None] // P_pg,
                                    axis=1)[:, 0]
         off = cache_pos % P_pg
-        kc = cache["k"].at[pidx, off].set(k[:, 0].astype(cache["k"].dtype))
-        vc = cache["v"].at[pidx, off].set(v[:, 0].astype(cache["v"].dtype))
-        new_cache = dict(k=kc, v=vc)
-        o = paged_attention(q, kc, vc, page_table, cache_pos + 1,
-                            chunk=attn_chunk)
+        if "k_scale" in cache:
+            # int8 pool: quantize on scatter — codes and their
+            # per-(row, head) scales land in the same page/row, so a page is
+            # self-describing and CoW/defrag/trie sharing move both together
+            kq, ks = quantize_kv(k[:, 0])
+            vq, vs = quantize_kv(v[:, 0])
+            kc = cache["k"].at[pidx, off].set(kq)
+            vc = cache["v"].at[pidx, off].set(vq)
+            kcs = cache["k_scale"].at[pidx, off].set(ks)
+            vcs = cache["v_scale"].at[pidx, off].set(vs)
+            new_cache = dict(k=kc, v=vc, k_scale=kcs, v_scale=vcs)
+            o = paged_attention(q, kc, vc, page_table, cache_pos + 1,
+                                k_scale=kcs, v_scale=vcs, chunk=attn_chunk)
+        else:
+            kc = cache["k"].at[pidx, off].set(k[:, 0].astype(cache["k"].dtype))
+            vc = cache["v"].at[pidx, off].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = dict(k=kc, v=vc)
+            o = paged_attention(q, kc, vc, page_table, cache_pos + 1,
+                                chunk=attn_chunk)
         o = o.reshape(B, S, n_heads * head_dim)
         out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
         return constrain(out, ("batch", None, None)), new_cache

@@ -14,20 +14,27 @@ Six modules, one contract:
                   ``repro.dist.cache_specs`` when rules are bound.
 - ``paging``    — ``PagedCachePool``: sub-slot fixed-size pages behind
                   per-slot page tables, with refcounted radix-trie
-                  shared-prefix reuse (``PrefixCache``) and page-level
-                  defrag; token streams identical to the slot pool.
+                  shared-prefix reuse (``PrefixCache``), page-level defrag,
+                  and optional int8 page storage (``kv_dtype="int8"``:
+                  codes + f32 row/head scales, ~2x resident capacity at
+                  matched pool bytes); token streams identical to the slot
+                  pool.
 - ``scheduler`` — FIFO admission + ``repro.dist.DeadlineGate`` overload
                   shedding.
 - ``decode``    — the ``lax.scan``-fused k-step decode block: k tokens per
                   host sync (the paper's CA-k schedule on the serve path).
 - ``engine``    — the run loop: ingest -> schedule -> k-step decode ->
                   retire -> stats; ``stream``/``stream_step`` surface token
-                  deltas every k-block.
+                  deltas every k-block. ``Request.n > 1`` fans one request
+                  into n streams sharing its prompt pages, stream i seeded
+                  with ``fold_in_seed(seed, i)`` — bit-identical to the
+                  standalone request carrying that seed.
 """
 from repro.serve.api import (Request, Response, StreamDelta, EngineStats,
                              FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
                              FINISH_SHED)
-from repro.serve.sampling import SamplingParams, SlotSampling, sample_tokens
+from repro.serve.sampling import (SamplingParams, SlotSampling,
+                                  fold_in_seed, host_fold_in, sample_tokens)
 from repro.serve.cache import CachePool, SlotError
 from repro.serve.paging import PagedCachePool, PrefixCache, PageError
 from repro.serve.scheduler import Scheduler
@@ -39,6 +46,7 @@ __all__ = [
     "Request", "Response", "StreamDelta", "EngineStats",
     "FINISH_EOS", "FINISH_ERROR", "FINISH_LENGTH", "FINISH_SHED",
     "SamplingParams", "SlotSampling", "sample_tokens",
+    "fold_in_seed", "host_fold_in",
     "CachePool", "SlotError", "Scheduler",
     "PagedCachePool", "PrefixCache", "PageError",
     "DecodeState", "init_decode_state", "make_decode_block",

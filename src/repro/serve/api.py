@@ -26,12 +26,18 @@ class Request:
     audio frontend is a stub repo-wide, so callers pass frame embeddings.
     sampling: decode policy; None (or the default ``SamplingParams()``) is
     greedy argmax, bit-identical to the pre-sampling engine.
+    n: parallel samples per request. The engine fans the request into n
+    streams that share the prompt's KV pages (paged pool) and draw from
+    ``fold_in(request_key, stream)`` — stream i is bit-identical to a
+    standalone request seeded with that derived key. Responses/deltas carry
+    ``stream`` ∈ [0, n); the request retires when all n streams finish.
     """
     id: str
     prompt: Sequence[int]
     max_new_tokens: int = 16
     enc_embeds: Optional[object] = None
     sampling: Optional[SamplingParams] = None
+    n: int = 1
     arrival_s: Optional[float] = None       # stamped by the engine at submit
 
 
@@ -44,6 +50,7 @@ class Response:
     prompt_len: int = 0
     queue_wait_s: float = 0.0                # submit -> slot assignment
     latency_s: float = 0.0                   # submit -> retirement
+    stream: int = 0                          # sample index for n>1 requests
 
 
 @dataclasses.dataclass
@@ -60,6 +67,7 @@ class StreamDelta:
     tokens: List[int]
     done: bool = False
     response: Optional[Response] = None
+    stream: int = 0                          # sample index for n>1 requests
 
 
 @dataclasses.dataclass
@@ -81,6 +89,12 @@ class EngineStats:
     prefix_tokens: int = 0                   # prefill tokens skipped via reuse
     cow_copies: int = 0                      # copy-on-write divergence pages
     page_defrags: int = 0                    # page-pool compactions
+    peak_live_pages: int = 0                 # high-water pool occupancy
+    # n>1 fan-out counters
+    fanout_groups: int = 0                   # admitted requests with n > 1
+    fanout_streams: int = 0                  # streams admitted via fan-out
+    shared_prompt_pages: int = 0             # sibling table entries that map
+                                             # a page instead of refilling it
     # double-buffered loop counters (zero on the non-overlapped engine)
     hidden_syncs: int = 0                    # block fetches made while a newer
                                              # block was already in flight
@@ -125,6 +139,10 @@ class EngineStats:
             s += (f" prefix_hit_rate={self.prefix_hit_rate:.2f} "
                   f"prefix_tokens={self.prefix_tokens} "
                   f"cow_copies={self.cow_copies}")
+        if self.fanout_groups:
+            s += (f" fanout_groups={self.fanout_groups} "
+                  f"fanout_streams={self.fanout_streams} "
+                  f"shared_prompt_pages={self.shared_prompt_pages}")
         if self.hidden_syncs:
             s += (f" hidden_syncs={self.hidden_syncs} "
                   f"blocking_syncs={self.blocking_syncs} "

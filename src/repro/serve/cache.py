@@ -131,6 +131,15 @@ class CachePool:
         self._keys[slot] = np.array([seed >> 32, seed & 0xFFFFFFFF],
                                     np.uint32)
 
+    def set_slot_key(self, slot: int, key) -> None:
+        """Bind a slot to pre-derived raw key data ((2,) uint32 threefry
+        words). The n>1 fan-out path derives stream i's key as
+        ``host_fold_in(base_key, i)`` — still host-only, same no-hidden-sync
+        contract as :meth:`seed_slot`."""
+        if slot not in self._owner:
+            raise SlotError(f"slot {slot} is not allocated")
+        self._keys[slot] = np.asarray(key, np.uint32).reshape(2)
+
     @property
     def slot_keys(self) -> np.ndarray:
         """(num_slots, 2) uint32 per-slot key data (zeros for greedy/free)."""

@@ -57,7 +57,7 @@ from repro.serve.api import (Request, Response, EngineStats, StreamDelta,
 from repro.serve.cache import CachePool
 from repro.serve.paging import PagedCachePool
 from repro.serve.decode import init_decode_state, make_decode_block
-from repro.serve.sampling import GREEDY, SlotSampling
+from repro.serve.sampling import GREEDY, SlotSampling, host_fold_in
 from repro.serve.scheduler import Scheduler
 
 # ---------------------------------------------------------------------------
@@ -145,12 +145,24 @@ class Engine:
     state must consume every prompt token, and whisper's decoder K/V mixes
     in per-request encoder output — so ssm/hybrid/audio decline it.
     num_pages: page-pool depth override (default: full slot backing + 1
-    scratch page).
+    scratch page; doubled when quantized).
+    kv_dtype: ``"f32"`` keeps the init_cache dtypes; ``"int8"`` (paged
+    pools only) stores pageable K/V as int8 codes with per-(page row, head)
+    f32 scales — quantized on scatter, dequantized inside both
+    ``paged_attention`` impls — roughly doubling resident-request capacity
+    at fixed pool bytes. Greedy token parity vs the f32 pool is statistical
+    (per-element rounding ≤ absmax/254), not bitwise.
     overlap: double-buffer the host loop — dispatch each round's block
     before blocking on the previous round's results, hiding the per-block
     host work behind device compute (see module docstring). Token streams
     are bit-identical either way; ``stats.hidden_syncs`` /
     ``stats.host_blocked_s`` report the effect.
+
+    ``Request.n > 1`` fans a request into n slots that share its prompt's
+    whole pages (refcount bump at admission, no copies) and draw from
+    ``fold_in(request_key, stream)``; each stream is bit-identical to a
+    standalone request carrying that derived key, and each finishes with
+    its own ``Response`` (``stream`` field set).
     """
 
     def __init__(self, params, cfg, *, rules=None, num_slots: int = 8,
@@ -163,6 +175,7 @@ class Engine:
                  page_size: Optional[int] = None,
                  prefix_cache: bool = False,
                  num_pages: Optional[int] = None,
+                 kv_dtype: str = "f32",
                  overlap: bool = False):
         self.params = params
         self.cfg = cfg
@@ -173,11 +186,14 @@ class Engine:
         self.eos_id = eos_id
         enc_len = (enc_len if enc_len is not None else max_len) \
             if cfg.family == "audio" else None
+        if kv_dtype != "f32" and page_size is None:
+            raise ValueError("kv_dtype requires a paged pool: pass page_size")
         pool: Optional[CachePool] = None
         if page_size is not None:
             pool = PagedCachePool(cfg, num_slots, max_len,
                                   page_size=page_size, rules=rules,
-                                  enc_len=enc_len, num_pages=num_pages)
+                                  enc_len=enc_len, num_pages=num_pages,
+                                  kv_dtype=kv_dtype)
             if not pool.has_paged:
                 pool = None                 # pure-SSM: nothing to page
         if pool is None:
@@ -211,6 +227,8 @@ class Engine:
         self._slot_t0: dict = {}
         self._slot_prompt: dict = {}    # int token lists for the prefix trie
         self._slot_first: dict = {}     # first-token wall time (TTFT metric)
+        self._slot_stream: dict = {}    # fan-out stream index per slot
+        self._groups: dict = {}         # request id -> unfinished streams
         self.stats = EngineStats()
         if cfg.family == "audio":
             row = lambda p, enc: prefill_audio_cache(
@@ -229,6 +247,16 @@ class Engine:
         n = len(req.prompt)
         if n < 1:
             raise ValueError(f"request {req.id}: empty prompt")
+        n_streams = int(req.n) if getattr(req, "n", None) is not None else 1
+        if n_streams < 1:
+            raise ValueError(f"request {req.id}: n must be >= 1, "
+                             f"got {req.n}")
+        if n_streams > self.pool.num_slots:
+            # a group admits atomically (all streams prefill in lockstep to
+            # share prompt pages) — wider than the pool can never be placed
+            raise ValueError(
+                f"request {req.id}: n={n_streams} exceeds "
+                f"num_slots={self.pool.num_slots}")
         if self.cfg.family == "audio":
             want = (self.pool.enc_len, self.cfg.d_model)
             got = np.shape(req.enc_embeds) if req.enc_embeds is not None \
@@ -266,56 +294,104 @@ class Engine:
                 self.stats.rejected += 1
                 _M_REQS.inc(reason=FINISH_ERROR)
                 continue
-            slot = self.pool.allocate(r.id)
-            slots.append(slot)
-            if self.cfg.family == "audio":
-                cache = self.pool.set_slot(
-                    st.cache, slot, self._audio_row(self.params,
-                                                    jnp.asarray(r.enc_embeds)))
-            else:
-                cache = self.pool.zero_slot(st.cache, slot)
-            st = st._replace(cache=cache)
-            prompt = [int(t) for t in r.prompt]
-            m = 0
-            if self.prefix_on:
-                # shared-prefix reuse: trie-matched pages map read-only
-                # into this slot's table and their prefill steps vanish —
-                # the slot starts decoding at lengths == m
-                m, cow = self.pool.map_prefix(slot, prompt)
-                if cow is not None:
-                    st = st._replace(
-                        cache=self.pool.copy_page(st.cache, *cow))
-                    self.stats.cow_copies += 1
-                    _M_COW.inc()
-                if m:
-                    self.stats.prefix_hits += 1
-                    self.stats.prefix_tokens += m
-                    _M_PREFIX_HITS.inc()
-                    _M_PREFIX_TOKENS.inc(m)
-            self._prompt_buf[slot, :] = 0
-            self._prompt_buf[slot, :n] = np.asarray(r.prompt, np.int32)
-            self._prompt_len[slot] = n
-            self._len_host[slot] = m
-            init_lens.append(m)
-            self._slot_prompt[slot] = prompt
-            self._max_new[slot] = max(int(r.max_new_tokens), 1)
-            self._active[slot] = True
+            n_streams = int(getattr(r, "n", 1) or 1)
             sp = r.sampling if r.sampling is not None else GREEDY
-            self._temp[slot] = sp.temperature
-            self._top_p[slot] = sp.top_p
-            self._top_k[slot] = sp.top_k
+            base_key = None
             if not sp.greedy:
                 seed = sp.seed if sp.seed is not None \
                     else int(self._seed_rng.randint(0, 2 ** 31 - 1))
-                self.pool.seed_slot(slot, seed)
-            self._slot_req[slot] = r
-            self._slot_toks[slot] = []
-            self._slot_t0[slot] = now
+                base_key = np.array([seed >> 32, seed & 0xFFFFFFFF],
+                                    np.uint32)
+            prompt = [int(t) for t in r.prompt]
+            P = self.pool.page_size if self.paged else 0
+            group_slots: List[int] = []
+            m0, cow, pinned = 0, None, False
+            for i in range(n_streams):
+                slot = self.pool.allocate(r.id)
+                group_slots.append(slot)
+                slots.append(slot)
+                if self.cfg.family == "audio":
+                    cache = self.pool.set_slot(
+                        st.cache, slot,
+                        self._audio_row(self.params,
+                                        jnp.asarray(r.enc_embeds)))
+                else:
+                    cache = self.pool.zero_slot(st.cache, slot)
+                st = st._replace(cache=cache)
+                if i == 0:
+                    if self.prefix_on:
+                        # shared-prefix reuse: trie-matched pages map
+                        # read-only into this slot's table and their prefill
+                        # steps vanish — the slot starts at lengths == m0
+                        m0, cow = self.pool.map_prefix(slot, prompt)
+                        if cow is not None:
+                            st = st._replace(
+                                cache=self.pool.copy_page(st.cache, *cow))
+                            self.stats.cow_copies += 1
+                            _M_COW.inc()
+                        if m0:
+                            self.stats.prefix_hits += 1
+                            # every stream of the group starts at m0
+                            self.stats.prefix_tokens += m0 * n_streams
+                            _M_PREFIX_HITS.inc()
+                            _M_PREFIX_TOKENS.inc(m0 * n_streams)
+                    if n_streams > 1 and self.paged:
+                        # reserve the whole-prompt page span up front so
+                        # the siblings below adopt (refcount-share) it
+                        # instead of allocating duplicate pages
+                        self.pool.reserve(slot, (n // P) * P)
+                        if cow is not None:
+                            # keep the CoW source page off the LRU eviction
+                            # path until every sibling's copy is issued
+                            self.pool.pin_page(cow[0])
+                            pinned = True
+                else:
+                    if self.paged:
+                        self.stats.shared_prompt_pages += \
+                            self.pool.adopt_prompt_pages(group_slots[0],
+                                                         slot, n)
+                        if cow is not None and (m0 // P) >= (n // P):
+                            # the trie match runs into the private boundary
+                            # page: this sibling needs its own CoW copy
+                            dst = self.pool.map_cow_page(slot, n // P)
+                            st = st._replace(cache=self.pool.copy_page(
+                                st.cache, cow[0], dst))
+                            self.stats.cow_copies += 1
+                            _M_COW.inc()
+                self._prompt_buf[slot, :] = 0
+                self._prompt_buf[slot, :n] = np.asarray(r.prompt, np.int32)
+                self._prompt_len[slot] = n
+                self._len_host[slot] = m0
+                init_lens.append(m0)
+                self._slot_prompt[slot] = prompt
+                self._max_new[slot] = max(int(r.max_new_tokens), 1)
+                self._active[slot] = True
+                self._temp[slot] = sp.temperature
+                self._top_p[slot] = sp.top_p
+                self._top_k[slot] = sp.top_k
+                if base_key is not None:
+                    # stream i draws from fold_in(request_key, i): derived
+                    # host-side (no hidden sync) and bit-identical to a
+                    # standalone request seeded with fold_in_seed(seed, i)
+                    self.pool.set_slot_key(
+                        slot, base_key if n_streams == 1
+                        else host_fold_in(base_key, i))
+                self._slot_req[slot] = r
+                self._slot_stream[slot] = i
+                self._slot_toks[slot] = []
+                self._slot_t0[slot] = now
+                if obs.enabled():
+                    obs.instant("serve.admit", id=r.id, slot=slot,
+                                prompt_len=n, prefix_reused=m0, stream=i)
+            if pinned:
+                self.pool.unpin_page(cow[0])
+            self._groups[r.id] = n_streams
             self.stats.admitted += 1
+            if n_streams > 1:
+                self.stats.fanout_groups += 1
+                self.stats.fanout_streams += n_streams
             if obs.enabled():
                 _M_QWAIT.observe(now - r.arrival_s)
-                obs.instant("serve.admit", id=r.id, slot=slot,
-                            prompt_len=n, prefix_reused=m)
         if slots:
             idx = jnp.asarray(slots, jnp.int32)
             z = jnp.zeros((len(slots),), jnp.int32)
@@ -375,6 +451,8 @@ class Engine:
                                  for s, p in self._slot_prompt.items()}
             self._slot_first = {mapping[s]: t
                                 for s, t in self._slot_first.items()}
+            self._slot_stream = {mapping[s]: i
+                                 for s, i in self._slot_stream.items()}
             self.stats.defrags += 1
             _M_DEFRAGS.inc(kind="slot")
         if self.paged and \
@@ -410,6 +488,8 @@ class Engine:
             for slot in self._slot_req:
                 self.pool.reserve(slot, int(self._len_host[slot]) + horizon)
             page_table = jnp.asarray(self.pool.tables)
+            self.stats.peak_live_pages = max(self.stats.peak_live_pages,
+                                             self.pool.live_page_count())
         ticket = obs.mark_dispatch("serve.decode_block")
         with obs.span("serve.decode_block", k=self.k, live=live):
             self.state, toks, emitted = self._block(
@@ -490,12 +570,14 @@ class Engine:
                         _M_TTFT.observe(ttft)
             if not done[slot]:
                 if got:
-                    deltas.append(StreamDelta(id=self._slot_req[slot].id,
-                                              tokens=got))
+                    deltas.append(StreamDelta(
+                        id=self._slot_req[slot].id, tokens=got,
+                        stream=self._slot_stream.get(slot, 0)))
                 continue
             r = self._slot_req.pop(slot)
             seq = self._slot_toks.pop(slot)
             t0 = self._slot_t0.pop(slot)
+            stream = self._slot_stream.pop(slot, 0)
             self._slot_prompt.pop(slot, None)
             # reason comes from the device-side done branch: a max_new/
             # cache-full retirement whose last draw happens to equal eos_id
@@ -504,7 +586,15 @@ class Engine:
             resp = Response(id=r.id, tokens=seq, finish_reason=reason,
                             prompt_len=len(r.prompt),
                             queue_wait_s=t0 - r.arrival_s,
-                            latency_s=end - r.arrival_s)
+                            latency_s=end - r.arrival_s, stream=stream)
+            # group bookkeeping: the request is fully retired when its last
+            # stream finishes (each stream ships its own Response)
+            left = self._groups.get(r.id)
+            if left is not None:
+                if left <= 1:
+                    del self._groups[r.id]
+                else:
+                    self._groups[r.id] = left - 1
             if obs.enabled():
                 _M_REQS.inc(reason=reason)
                 _M_LATENCY.observe(resp.latency_s)
@@ -516,7 +606,7 @@ class Engine:
             self._slot_first.pop(slot, None)
             out.append(resp)
             deltas.append(StreamDelta(id=r.id, tokens=got, done=True,
-                                      response=resp))
+                                      response=resp, stream=stream))
             if self._pipe:
                 # stale-slot fence: a newer in-flight block still owns this
                 # row (it was active at that block's dispatch) — defer the

@@ -38,6 +38,17 @@ pool runs dry. ``defrag_pages`` compacts live pages to the front of the
 pool with a pure permutation — refcounts, tables and trie pointers are
 remapped through the same LUT, and the PR-5 emission-count PRNG keys are
 untouched, so sampled streams stay bit-identical across page defrags.
+
+Quantized pages (``kv_dtype="int8"``): the pageable K/V leaves store int8
+with a sibling f32 scale leaf per page (``k_scale``/``v_scale``, one scale
+per page row per KV head — symmetric absmax over head_dim). Quantization
+happens on scatter in the decode write path (``models.blocks``) and both
+``paged_attention`` impls dequantize on read, so the scale leaves ride the
+same page tables, CoW copies, LUT defrags and trie shares as the values
+they scale. At the bf16 leaves the pool replaces, an int8 page plus its
+scales costs ~(Dh+4)/(2*Dh) ≈ half the bytes — the default ``num_pages``
+doubles accordingly, multiplying resident-request capacity ~2x at ~constant
+pool bytes (``page_bytes`` exposes the exact accounting).
 """
 from __future__ import annotations
 
@@ -76,6 +87,41 @@ def _page_axes(cfg, max_len: int, enc_len: Optional[int], batch_axes):
         return axes[0] if axes[0] == bax + 1 else _NO_BATCH
 
     return jax.tree.map(diff, a, b, batch_axes)
+
+
+def _with_scale_siblings(tree, axes, fn):
+    """Rebuild ``tree`` (dict/list/tuple pytree), giving paged K/V dict
+    leaves a ``<name>_scale`` sibling.
+
+    ``fn(name, leaf, ax) -> (new_leaf, scale_or_None)`` decides both the
+    leaf transform and whether a sibling is added (None: no sibling);
+    ``axes`` is a same-structure tree (the *base* page axes) threaded
+    through so ``fn`` can tell paged leaves apart. ``jax.tree.map`` cannot
+    add keys, hence the explicit walk — scale leaves must live beside their
+    parents inside the cache pytree so they ride the jitted decode block's
+    carry like any other cache leaf.
+    """
+    if isinstance(tree, dict):
+        out = {}
+        for name in tree:
+            sub, ax = tree[name], axes[name]
+            if isinstance(sub, (dict, list, tuple)):
+                out[name] = _with_scale_siblings(sub, ax, fn)
+            else:
+                leaf, scale = fn(name, sub, ax)
+                out[name] = leaf
+                if scale is not None:
+                    out[name + "_scale"] = scale
+        return out
+    if isinstance(tree, (list, tuple)):
+        vals = []
+        for sub, ax in zip(tree, axes):
+            if isinstance(sub, (dict, list, tuple)):
+                vals.append(_with_scale_siblings(sub, ax, fn))
+            else:
+                vals.append(fn(None, sub, ax)[0])
+        return type(tree)(vals)
+    return fn(None, tree, axes)[0]
 
 
 class _TrieNode:
@@ -134,6 +180,7 @@ class PrefixCache:
             depth += 1
         rem = tuple(prompt[depth * P:(depth + 1) * P])
         best: Optional[Tuple[int, int]] = None
+        best_node: Optional[_TrieNode] = None
         if rem:
             for ch, child in node.children.items():
                 n = 0
@@ -143,7 +190,12 @@ class PrefixCache:
                     n += 1
                 if n and (best is None or n > best[1]):
                     best = (child.page, n)
-                    self._touch(child)
+                    best_node = child
+            # touch only the winning candidate: refreshing every scanned
+            # runner-up would keep cold losing branches perpetually "recent"
+            # and skew evict_lru toward dropping genuinely hot leaves
+            if best_node is not None:
+                self._touch(best_node)
         return pages, best
 
     def insert_path(self, chunks: Sequence[tuple],
@@ -172,12 +224,19 @@ class PrefixCache:
             yield node
             stack.extend(node.children.values())
 
-    def evict_lru(self) -> Optional[int]:
+    def evict_lru(self, evictable=None) -> Optional[int]:
         """Drop the least-recently-matched *leaf*; returns its page (caller
-        owns the refcount decrement), or None when the trie is empty."""
+        owns the refcount decrement), or None when no leaf qualifies.
+
+        ``evictable``: optional page predicate. Leaves whose page fails it
+        (e.g. one a slot table still maps — dropping the node would free
+        nothing) are skipped rather than evicted."""
         leaf = None
         for node in self.iter_nodes():
-            if not node.children and (leaf is None or node.tick < leaf.tick):
+            if node.children or \
+                    (evictable is not None and not evictable(node.page)):
+                continue
+            if leaf is None or node.tick < leaf.tick:
                 leaf = node
         if leaf is None:
             return None
@@ -201,29 +260,57 @@ class PagedCachePool(CachePool):
 
     def __init__(self, cfg, num_slots: int, max_len: int, *,
                  page_size: int, rules=None, enc_len: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, kv_dtype: str = "f32"):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if kv_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'f32' or 'int8', got {kv_dtype!r}")
         if getattr(cfg, "family", None) == "audio" and enc_len is None:
             enc_len = max_len      # pin enc_len so the max_len diff is clean
         super().__init__(cfg, num_slots, max_len, rules=rules,
                          enc_len=enc_len)
         self.page_size = int(page_size)
         self.pages_per_slot = -(-self.max_len // self.page_size)   # ceil
+        base_pax = _page_axes(cfg, self.max_len, self.enc_len,
+                              self.batch_axes)
+        self.has_paged = any(ax != _NO_BATCH
+                             for ax in jax.tree.leaves(base_pax))
+        self.kv_dtype = kv_dtype
+        self.quantized = kv_dtype == "int8" and self.has_paged
         # +1 for the reserved scratch page 0; default backing is full
-        # capacity, so reserve() can always succeed after trie eviction
-        self.num_pages = (1 + self.num_slots * self.pages_per_slot
-                          if num_pages is None else int(num_pages))
+        # capacity, so reserve() can always succeed after trie eviction. An
+        # int8 page (+ its f32 row/head scales) costs ~half the bytes of the
+        # bf16 page it replaces, so the quantized default doubles the
+        # backing — ~2x resident capacity at ~constant pool bytes.
+        if num_pages is None:
+            num_pages = 1 + self.num_slots * self.pages_per_slot * \
+                (2 if self.quantized else 1)
+        self.num_pages = int(num_pages)
         if self.num_pages < 2:
             raise ValueError("num_pages must cover scratch + one real page")
-        self.page_axes = _page_axes(cfg, self.max_len, self.enc_len,
-                                    self.batch_axes)
-        self.has_paged = any(ax != _NO_BATCH
-                             for ax in jax.tree.leaves(self.page_axes))
+        # _base_page_axes matches the init_cache structure (no scale leaves);
+        # page_axes/batch_axes below match the *actual* pool cache, which in
+        # quantized mode carries k_scale/v_scale siblings. A scale leaf is
+        # its parent minus the trailing head_dim axis, so its page axis sits
+        # at the same index (pax - 1) — every page op (copy_page, defrag
+        # take, LUT permute) applies to it unchanged under the parent's pax.
+        self._base_page_axes = base_pax
+        self.page_axes = base_pax
         # paged leaves leave the slot world: inherited ops must skip them
         self.batch_axes = jax.tree.map(
             lambda bax, pax: _NO_BATCH if pax != _NO_BATCH else bax,
-            self.batch_axes, self.page_axes)
+            self.batch_axes, base_pax)
+        if self.quantized:
+            self.page_axes = _with_scale_siblings(
+                base_pax, base_pax,
+                lambda name, pax, _: (pax, pax if self._quant_leaf(name, pax)
+                                      else None))
+            self.batch_axes = _with_scale_siblings(
+                self.batch_axes, base_pax,
+                lambda name, bax, pax: (bax, _NO_BATCH
+                                        if self._quant_leaf(name, pax)
+                                        else None))
         self._tables = np.zeros((self.num_slots, self.pages_per_slot),
                                 np.int32)
         self._n_pages = np.zeros((self.num_slots,), np.int32)
@@ -233,21 +320,73 @@ class PagedCachePool(CachePool):
         self.prefix = PrefixCache(self.page_size)
 
     # ----------------------------------------------------------- construction
-    def make_cache(self):
+    @staticmethod
+    def _quant_leaf(name, pax) -> bool:
+        """Paged attention K/V value leaves are the ones that quantize (and
+        grow a scale sibling); whisper's cross K/V keep slot layout (``pax ==
+        _NO_BATCH``) and are excluded along with conv/ssm state."""
+        return pax != _NO_BATCH and name in ("k", "v")
+
+    def _pool_arrays(self):
+        """The pool cache pytree (pre-sharding) — paged leaves in page-pool
+        layout, int8 + f32 scale siblings when quantized."""
         cache = init_cache(self.cfg, self.num_slots, self.max_len,
                            enc_len=self.enc_len)
 
-        def f(leaf, pax):
-            if pax == _NO_BATCH:
-                return leaf
-            shp = (leaf.shape[:pax - 1] + (self.num_pages, self.page_size)
-                   + leaf.shape[pax + 1:])
-            return jnp.zeros(shp, leaf.dtype)
+        def paged_shape(leaf, pax):
+            return (leaf.shape[:pax - 1] + (self.num_pages, self.page_size)
+                    + leaf.shape[pax + 1:])
 
-        cache = jax.tree.map(f, cache, self.page_axes)
+        if not self.quantized:
+            return jax.tree.map(
+                lambda leaf, pax: leaf if pax == _NO_BATCH
+                else jnp.zeros(paged_shape(leaf, pax), leaf.dtype),
+                cache, self._base_page_axes)
+
+        def f(name, leaf, pax):
+            if pax == _NO_BATCH:
+                return leaf, None
+            shp = paged_shape(leaf, pax)
+            if not self._quant_leaf(name, pax):
+                return jnp.zeros(shp, leaf.dtype), None
+            # scale = parent minus the trailing head_dim axis: one f32 per
+            # (page, row, kv head). Unwritten rows dequantize to 0 * 1.0.
+            return (jnp.zeros(shp, jnp.int8),
+                    jnp.ones(shp[:-1], jnp.float32))
+
+        return _with_scale_siblings(cache, self._base_page_axes, f)
+
+    def make_cache(self):
+        cache = self._pool_arrays()
         if self.rules is not None and self.rules.n_devices > 1:
             cache = jax.device_put(cache, cache_shardings(cache, self.rules))
         return cache
+
+    def page_bytes(self) -> int:
+        """Bytes one pool page costs across every paged leaf — scale
+        siblings included — i.e. pool bytes / num_pages for the paged part.
+        The capacity bench sizes matched-byte pools with this."""
+        shapes = jax.eval_shape(self._pool_arrays)
+        total = 0
+        for leaf, pax in zip(jax.tree.leaves(shapes),
+                             jax.tree.leaves(self.page_axes)):
+            if pax == _NO_BATCH:
+                continue
+            n = int(np.prod(leaf.shape)) // leaf.shape[pax - 1]
+            total += n * leaf.dtype.itemsize
+        return total
+
+    def set_slot(self, cache, slot: int, row_cache):
+        # the batch=1 row cache comes from init_cache and has no scale
+        # leaves; pad its structure with dummies (their batch_axes entries
+        # are _NO_BATCH, so the inherited write skips them)
+        if self.quantized:
+            row_cache = _with_scale_siblings(
+                row_cache, self._base_page_axes,
+                lambda name, leaf, pax: (leaf, jnp.zeros(())
+                                         if self._quant_leaf(name, pax)
+                                         else None))
+        return super().set_slot(cache, slot, row_cache)
 
     # ------------------------------------------------------------ bookkeeping
     @property
@@ -267,7 +406,12 @@ class PagedCachePool(CachePool):
         while True:
             if self._free_pages:
                 return heapq.heappop(self._free_pages)
-            pg = self.prefix.evict_lru()
+            # only leaves the trie *solely* owns (refcount == the trie's own
+            # single reference) can yield a free page. Evicting a slot-held
+            # leaf frees nothing — the old loop did exactly that, wiping the
+            # whole trie on its way to the same PageError and destroying
+            # every future prefix hit in the process.
+            pg = self.prefix.evict_lru(evictable=lambda p: self._ref[p] <= 1)
             if pg is None:
                 raise PageError("page pool exhausted")
             self._decref(pg)
@@ -363,6 +507,56 @@ class PagedCachePool(CachePool):
         for pg in added:
             self._ref[pg] += 1                # the trie's own reference
         return len(added)
+
+    # --------------------------------------------------------- n>1 fan-out
+    def adopt_prompt_pages(self, src_slot: int, dst_slot: int,
+                           n_tok: int) -> int:
+        """Share ``src_slot``'s whole-prompt pages into ``dst_slot``'s table.
+
+        Fan-out admission: the n streams of one request prefill the same
+        prompt in lockstep, so every page that lies entirely inside the
+        prompt holds identical K/V no matter which stream writes it — the
+        siblings map the *same* refcounted pages (no bytes copied, no extra
+        prefill residency) and only the boundary page (first divergent
+        token) stays private. Returns the number of shared pages.
+        """
+        for s in (src_slot, dst_slot):
+            if s not in self._owner:
+                raise SlotError(f"slot {s} is not allocated")
+        if int(self._n_pages[dst_slot]):
+            raise PageError(f"slot {dst_slot} already holds pages")
+        n_shared = min(int(n_tok) // self.page_size,
+                       int(self._n_pages[src_slot]))
+        for i in range(n_shared):
+            pg = int(self._tables[src_slot, i])
+            self._ref[pg] += 1
+            self._tables[dst_slot, i] = pg
+        self._n_pages[dst_slot] = n_shared
+        return n_shared
+
+    def map_cow_page(self, slot: int, index: int) -> int:
+        """Allocate a fresh private page at ``table[slot, index]`` (the
+        fan-out boundary-page CoW destination). Returns the new page; the
+        caller owns the device ``copy_page`` into it."""
+        if slot not in self._owner:
+            raise SlotError(f"slot {slot} is not allocated")
+        if int(self._n_pages[slot]) != index:
+            raise PageError(
+                f"slot {slot}: cow index {index} != next page "
+                f"{int(self._n_pages[slot])}")
+        dst = self._take_free_page()
+        self._ref[dst] += 1
+        self._tables[slot, index] = dst
+        self._n_pages[slot] = index + 1
+        return dst
+
+    def pin_page(self, page: int) -> None:
+        """Extra refcount hold — keeps a CoW source page off the eviction
+        path while a fan-out admission is still issuing sibling copies."""
+        self._ref[page] += 1
+
+    def unpin_page(self, page: int) -> None:
+        self._decref(page)
 
     def copy_page(self, cache, src: int, dst: int):
         """Device-copy pool page ``src`` into ``dst`` (copy-on-write)."""

@@ -24,10 +24,12 @@ truncated distribution.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +51,16 @@ class SamplingParams:
     seed: Optional[int] = None
 
     def __post_init__(self):
-        if self.temperature < 0.0:
-            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
-        if not 0.0 < self.top_p <= 1.0:
-            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        # non-finite values must be rejected explicitly: every ordered
+        # comparison against NaN is False, so ``temperature=float("nan")``
+        # sails through the range checks below, reads as non-greedy, and
+        # turns the scaled logits all-NaN at draw time
+        if not math.isfinite(self.temperature) or self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be finite and >= 0, got {self.temperature}")
+        if not math.isfinite(self.top_p) or not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be finite and in (0, 1], got {self.top_p}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
 
@@ -103,14 +111,21 @@ def sample_tokens(logits: jnp.ndarray, greedy_tok: jnp.ndarray,
             jnp.maximum(samp.temperature, _TEMP_FLOOR)[:, None]
         order = jnp.argsort(-x, axis=-1)                  # descending
         xs = jnp.take_along_axis(x, order, axis=-1)
-        probs = jax.nn.softmax(xs, axis=-1)
+        # top-k truncates FIRST; the nucleus is then computed over the
+        # renormalized top-k survivors. Running top-p on the unfiltered
+        # softmax would count mass on tokens top-k is about to remove, so
+        # the surviving set would not be "the renormalized truncated
+        # distribution" — with top_k=3, top_p=0.6 and a flat tail, the old
+        # order kept only rank 0 even when ranks 0-1 of the top-3 carried
+        # less than 60% of the *truncated* mass.
+        kk = jnp.where(samp.top_k > 0, samp.top_k, V)
+        rank_keep = jnp.arange(V)[None, :] < kk[:, None]
+        probs = jax.nn.softmax(jnp.where(rank_keep, xs, -jnp.inf), axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         # nucleus: token i survives iff the mass strictly before it is still
         # short of top_p — the minimal prefix with mass >= top_p (rank 0
         # always survives since 0 < top_p)
-        keep = (cum - probs) < samp.top_p[:, None]
-        kk = jnp.where(samp.top_k > 0, samp.top_k, V)
-        keep &= jnp.arange(V)[None, :] < kk[:, None]
+        keep = rank_keep & ((cum - probs) < samp.top_p[:, None])
         masked = jnp.where(keep, xs, -jnp.inf)
         # Gumbel-max over the masked logits == a draw from the renormalized
         # truncated softmax; one fresh key per (slot, emission index)
@@ -124,3 +139,56 @@ def sample_tokens(logits: jnp.ndarray, greedy_tok: jnp.ndarray,
     # whole-batch greedy (the common serving default) skips the sort/softmax/
     # gumbel work at runtime — one trace, branch chosen on device
     return jax.lax.cond(jnp.all(greedy), all_greedy, mixed, None)
+
+
+# ---------------------------------------------------------------------------
+# Host-side threefry fold_in (fan-out stream keys)
+# ---------------------------------------------------------------------------
+# Rotation schedule + key-parity constant of threefry2x32 — the PRNG behind
+# jax.random.PRNGKey / fold_in.
+_THREEFRY_ROT = ((13, 15, 26, 6), (17, 29, 16, 24))
+_THREEFRY_PARITY = np.uint32(0x1BD11BDA)
+
+
+def host_fold_in(key: np.ndarray, data: int) -> np.ndarray:
+    """``jax.random.fold_in`` on raw host key data, bit-identical.
+
+    key: (2,) uint32 threefry2x32 key words (the ``CachePool`` slot-key
+    layout); data: the fold index. Returns the derived (2,) uint32 key.
+
+    n>1 fan-out derives stream i's request key as ``fold_in(base_key, i)``
+    at admission. Doing that with ``jax.random.fold_in`` would materialize a
+    device key and fetch it back — an uncounted host sync per admitted
+    stream, exactly the class of hidden sync ``obs.sync_audit`` polices (it
+    already caught ``seed_slot`` doing this). So the 20-round threefry2x32
+    block runs here in numpy; ``tests/test_fanout.py`` pins bit-equality
+    against the device ``fold_in``.
+    """
+    ks0 = np.uint32(key[0])
+    ks1 = np.uint32(key[1])
+    ks = (ks0, ks1, ks0 ^ ks1 ^ _THREEFRY_PARITY)
+    # fold_in(key, d) == threefry2x32(key, threefry_seed(uint32(d))), and
+    # threefry_seed of a 32-bit input is the block [0, d]
+    x0 = np.uint32(0)
+    x1 = np.uint32(np.uint64(int(data)) & np.uint64(0xFFFFFFFF))
+    with np.errstate(over="ignore"):
+        x0 += ks[0]
+        x1 += ks[1]
+        for d in range(5):
+            for r in _THREEFRY_ROT[d % 2]:
+                x0 += x1
+                x1 = (x1 << np.uint32(r)) | (x1 >> np.uint32(32 - r))
+                x1 ^= x0
+            x0 += ks[(d + 1) % 3]
+            x1 += ks[(d + 2) % 3] + np.uint32(d + 1)
+    return np.array([x0, x1], np.uint32)
+
+
+def fold_in_seed(seed: int, index: int) -> int:
+    """The integer seed whose ``PRNGKey`` equals ``fold_in(PRNGKey(seed),
+    index)`` — i.e. the standalone-request seed that reproduces fan-out
+    stream ``index`` bit for bit (``PRNGKey`` packs a 64-bit seed as
+    ``[seed >> 32, seed & 0xffffffff]``)."""
+    hi, lo = host_fold_in(
+        np.array([seed >> 32, seed & 0xFFFFFFFF], np.uint32), index)
+    return (int(hi) << 32) | int(lo)

@@ -81,7 +81,20 @@ class Scheduler:
             cand = [r for i, r in enumerate(cand) if i in kept]
             if shed:
                 _M_GATE_SHED.inc(len(shed))
-        admit = cand[:max(free_slots, 0)]
-        keep_back = cand[max(free_slots, 0):]
+        # slot-cost-aware FIFO: an n>1 request consumes n slots (one per
+        # fan-out stream) and admits atomically — all streams or none, since
+        # the siblings must prefill in lockstep to share prompt pages.
+        # Head-of-line blocking is deliberate: skipping past a too-wide
+        # request would starve it under steady narrow traffic.
+        free = max(free_slots, 0)
+        admit: List[Request] = []
+        used = 0
+        for r in cand:
+            cost = max(int(getattr(r, "n", 1) or 1), 1)
+            if used + cost > free:
+                break
+            admit.append(r)
+            used += cost
+        keep_back = cand[len(admit):]
         self._q = deque(keep_back)
         return admit, shed

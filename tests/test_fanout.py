@@ -1,0 +1,189 @@
+"""n>1 fan-out sampling over shared prompt pages: determinism + bookkeeping.
+
+The fan-out contract is *derivation, not coupling*: an ``n``-stream request
+is exactly n standalone requests whose seeds are ``fold_in(request_key, i)``
+— stream i's tokens must be bitwise-identical to a lone request carrying
+that derived key, across every execution shape (k-block size, the
+double-buffered loop, a defrag relocating the streams mid-decode). What the
+engine *shares* is residency, not randomness: whole prompt pages map into
+every sibling's table by refcount bump, so the suite also pins the page
+accounting (shared pages counted, everything released at retirement) and the
+atomic all-or-nothing group admission.
+
+``host_fold_in`` is the load-bearing piece — the key derivation runs in
+numpy at admission (a device ``jax.random.fold_in`` there would be a hidden
+host sync per stream), so its bit-equality against the real thing is pinned
+first.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.kernels import registry
+from repro.models import init_params
+from repro.serve import Engine, Request, SamplingParams, Scheduler
+from repro.serve.sampling import fold_in_seed, host_fold_in
+
+CFG = smoke_config(get_arch("internlm2-1.8b"))
+PROMPT = [7, 3, 11, 5, 2, 9, 6, 1]
+N_NEW = 6
+BASE_SEED = 123
+SP = dict(temperature=0.8, top_p=0.9, top_k=8)
+
+#: standalone reference streams keyed by stream index — token streams are
+#: k-invariant (PR 5), so one reference drain per stream anchors the sweep
+_REFS: dict = {}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------- key derivation --
+def test_host_fold_in_bit_identical_to_jax():
+    """The numpy threefry2x32 fold_in matches ``jax.random.fold_in`` word
+    for word on arbitrary keys and indices."""
+    rng = np.random.RandomState(0)
+    for _ in range(16):
+        key = rng.randint(0, 2 ** 31, size=2).astype(np.uint32)
+        idx = int(rng.randint(0, 2 ** 31))
+        want = np.asarray(jax.random.fold_in(jnp.asarray(key, jnp.uint32),
+                                             idx))
+        np.testing.assert_array_equal(host_fold_in(key, idx), want)
+
+
+def test_fold_in_seed_reproduces_key_words():
+    """``fold_in_seed(seed, i)`` packs exactly the key ``seed_slot`` would
+    build from it — the standalone-request seed of fan-out stream i."""
+    for seed, i in ((0, 0), (123, 3), (2 ** 40 + 17, 7)):
+        base = np.array([seed >> 32, seed & 0xFFFFFFFF], np.uint32)
+        derived = fold_in_seed(seed, i)
+        want = host_fold_in(base, i)
+        got = np.array([derived >> 32, derived & 0xFFFFFFFF], np.uint32)
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- determinism --
+def _standalone(params, stream: int):
+    """Tokens of the lone-request reference for fan-out stream ``stream``."""
+    if stream not in _REFS:
+        with registry.use("xla"):
+            eng = Engine(params, CFG, num_slots=1, max_len=32, k=4,
+                         max_prompt=8, page_size=5)
+            resp = eng.run([Request(
+                id=f"ref{stream}", prompt=PROMPT, max_new_tokens=N_NEW,
+                sampling=SamplingParams(
+                    seed=fold_in_seed(BASE_SEED, stream), **SP))])[0]
+        _REFS[stream] = resp.tokens
+    return _REFS[stream]
+
+
+def _fanout(params, *, k, overlap=False, num_slots=4, fillers=(),
+            page_size=5):
+    """Drain an n=4 fan-out (optionally behind slot-churning fillers);
+    returns ({stream: tokens}, engine)."""
+    with registry.use("xla"):
+        eng = Engine(params, CFG, num_slots=num_slots, max_len=32, k=k,
+                     max_prompt=8, page_size=page_size, overlap=overlap)
+        reqs = [Request(id=f"f{i}", prompt=[9 + i], max_new_tokens=mn,
+                        sampling=SamplingParams(temperature=1.2,
+                                                seed=100 + i))
+                for i, mn in enumerate(fillers)]
+        reqs.append(Request(id="g", prompt=PROMPT, max_new_tokens=N_NEW,
+                            sampling=SamplingParams(seed=BASE_SEED, **SP),
+                            n=4))
+        out = eng.run(reqs)
+    return {r.stream: r.tokens for r in out if r.id == "g"}, eng
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_fanout_streams_bit_identical_to_standalone(params, k, overlap):
+    """Every stream of an n=4 request equals a standalone request seeded
+    ``fold_in_seed(base, i)`` — at k ∈ {1, 4, 16}, blocking and
+    double-buffered loop alike."""
+    got, eng = _fanout(params, k=k, overlap=overlap)
+    assert sorted(got) == [0, 1, 2, 3]
+    for i in range(4):
+        assert got[i] == _standalone(params, i), f"stream {i} diverged"
+    # streams drew from distinct derived keys, not one shared stream
+    assert len({tuple(t) for t in got.values()}) > 1
+    assert eng.stats.fanout_groups == 1
+    assert eng.stats.fanout_streams == 4
+
+
+def test_fanout_survives_defrag_mid_stream(params):
+    """Fillers retiring early force a slot defrag (and page compaction)
+    while the 4 streams are mid-decode; relocation must not perturb any
+    stream (keys and pages travel with their slots)."""
+    got, eng = _fanout(params, k=4, num_slots=8, fillers=(2, 2, 2, 2))
+    assert eng.stats.defrags + eng.stats.page_defrags >= 1, \
+        "defrag was not exercised"
+    for i in range(4):
+        assert got[i] == _standalone(params, i), f"stream {i} diverged"
+
+
+def test_fanout_greedy_streams_coincide(params):
+    """Greedy fan-out is the degenerate case: no keys, so all n streams
+    emit the same argmax tokens (still one Response per stream)."""
+    with registry.use("xla"):
+        eng = Engine(params, CFG, num_slots=3, max_len=32, k=4,
+                     max_prompt=8, page_size=5)
+        out = eng.run([Request(id="g", prompt=PROMPT, max_new_tokens=4, n=3)])
+    assert sorted(r.stream for r in out) == [0, 1, 2]
+    assert len({tuple(r.tokens) for r in out}) == 1
+
+
+# ------------------------------------------------------------- bookkeeping --
+def test_fanout_shares_prompt_pages_and_releases_them(params):
+    """Sibling streams map the prompt's whole pages by refcount (no copies):
+    with page_size 5 and an 8-token prompt each of the 3 siblings adopts 1
+    page, and retirement returns every page to the pool."""
+    got, eng = _fanout(params, k=4)
+    assert eng.stats.shared_prompt_pages == 3
+    assert eng.pool.live_page_count() == 0
+    assert eng.pool.free_page_count == eng.pool.num_pages - 1
+    assert eng._groups == {}
+
+
+def test_fanout_deltas_carry_stream_index(params):
+    """Streaming surface: each delta is attributable to its stream, and the
+    terminal delta's Response carries the same index."""
+    with registry.use("xla"):
+        eng = Engine(params, CFG, num_slots=2, max_len=32, k=4, max_prompt=8,
+                     page_size=5)
+        got: dict = {}
+        for d in eng.stream([Request(
+                id="g", prompt=PROMPT, max_new_tokens=N_NEW,
+                sampling=SamplingParams(seed=BASE_SEED, **SP), n=2)]):
+            got.setdefault(d.stream, []).extend(d.tokens)
+            if d.done:
+                assert d.response.stream == d.stream
+    assert sorted(got) == [0, 1]
+    for i in (0, 1):
+        assert got[i] == _standalone(params, i)
+
+
+def test_group_admission_is_atomic():
+    """The scheduler admits an n-stream group all-or-nothing and keeps FIFO
+    order (head-of-line blocking: a too-wide group is never skipped)."""
+    sch = Scheduler(clock=lambda: 0.0)
+    sch.submit(Request(id="wide", prompt=[1], n=3))
+    sch.submit(Request(id="narrow", prompt=[2]))
+    admit, shed = sch.schedule(free_slots=2)
+    assert admit == [] and shed == []          # 3 > 2: whole group waits,
+    assert len(sch) == 2                       # and nothing jumps the queue
+    admit, _ = sch.schedule(free_slots=4)
+    assert [r.id for r in admit] == ["wide", "narrow"]
+
+
+def test_submit_validates_n(params):
+    eng = Engine(params, CFG, num_slots=2, max_len=16, k=2, max_prompt=4,
+                 page_size=4)
+    with pytest.raises(ValueError):
+        eng.submit(Request(id="zero", prompt=[1], n=0))
+    with pytest.raises(ValueError):
+        eng.submit(Request(id="wide", prompt=[1], n=3))   # > num_slots

@@ -170,6 +170,41 @@ def test_prefix_trie_match_insert_evict():
     assert trie.evict_lru() is None
 
 
+def test_prefix_match_touches_only_the_winning_partial():
+    """LRU hygiene: the CoW-candidate scan must not refresh losing
+    branches. Three leaves inserted cold-to-hot (C, W, H); a probe whose
+    divergent chunk best-matches W used to touch C on the way past, making
+    H — the genuinely hottest leaf — the eviction victim."""
+    trie = PrefixCache(page_size=4)
+    trie.insert_path([(1, 2, 3, 4)], [7])       # C: oldest
+    trie.insert_path([(1, 2, 8, 8)], [9])       # W: the winning partial
+    trie.insert_path([(5, 6, 7, 8)], [8])       # H: most recent
+    full, partial = trie.match([1, 2, 8, 9])
+    assert full == [] and partial == (9, 3)     # W wins with lcp 3
+    # only W was refreshed: C is still the LRU leaf, H stays hot
+    assert trie.evict_lru() == 7
+
+
+def test_exhaustion_with_slot_held_pages_fails_fast_keeping_trie():
+    """Eviction-spiral regression: when every trie page is also slot-held,
+    eviction can free nothing — reserve() must raise PageError *without*
+    wiping the trie (the old loop destroyed every node on its way to the
+    same error, forfeiting all future prefix reuse)."""
+    pool = PagedCachePool(CFG_TINY, 2, 8, page_size=4, num_pages=3)
+    a = pool.allocate("a")
+    pool.reserve(a, 8)
+    pool.register_prefix(a, [1, 2, 3, 4, 5, 6, 7, 8], written_len=8)
+    assert pool.prefix.n_nodes == 2 and pool.free_page_count == 0
+    b = pool.allocate("b")          # a still holds its pages (refcount 2)
+    with pytest.raises(PageError):
+        pool.reserve(b, 4)
+    assert pool.prefix.n_nodes == 2             # trie intact
+    # with a retired, the same reserve succeeds via genuine LRU eviction
+    pool.free(a)
+    pool.reserve(b, 8)
+    assert pool.prefix.n_nodes == 0
+
+
 def test_paged_pool_refcounts_across_retire_and_defrag():
     """Pages stay alive while any slot table or trie node references them;
     retire drops the slot's reference but keeps published pages resident;

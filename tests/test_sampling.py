@@ -133,6 +133,31 @@ def test_mixed_batch_greedy_rows_bitwise_argmax():
     assert len(set(toks[~greedy_mask])) > 1       # T=5 actually samples
 
 
+def test_top_k_top_p_composition_truncates_in_order():
+    """top-k first, nucleus over the renormalized survivors: with top_k=3
+    and top_p=0.8 the top-3 renormalized masses are [.63, .23, .14], so the
+    nucleus keeps exactly ranks {0, 1}. Computing the nucleus on the
+    *unfiltered* softmax (the pre-fix order) kept rank 2 as well — its
+    unfiltered before-mass .77 < .8 — so a draw escaping to token 4 is the
+    regression signature."""
+    top_k, top_p, n = 3, 0.8, 6000
+    probs = np.asarray(jax.nn.softmax(LOGITS))
+    order = np.argsort(-probs)
+    trunc = probs[order[:top_k]] / probs[order[:top_k]].sum()
+    before = np.cumsum(trunc) - trunc
+    keep = sorted(order[:top_k][before < top_p])      # == [0, 1]
+    assert keep == [0, 1]
+
+    toks = _draws(SamplingParams(temperature=1.0, top_k=top_k, top_p=top_p,
+                                 seed=6), n)
+    assert set(np.unique(toks)) == set(keep), \
+        f"support {sorted(set(toks))} != nucleus-of-top-k {keep}"
+    renorm = np.zeros_like(probs)
+    renorm[keep] = trunc[before < top_p] / trunc[before < top_p].sum()
+    stat = _chi2(toks, renorm, keep)
+    assert stat < CHI2_999[len(keep) - 1], f"chi2={stat:.1f}"
+
+
 def test_sampling_params_validation():
     for bad in (dict(temperature=-0.1), dict(top_p=0.0), dict(top_p=1.5),
                 dict(top_k=-1)):
@@ -140,6 +165,19 @@ def test_sampling_params_validation():
             SamplingParams(**bad)
     assert SamplingParams().greedy
     assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_sampling_params_rejects_non_finite():
+    """NaN compares False against every bound, so the range checks alone
+    let ``temperature=nan`` through as a non-greedy policy whose scaled
+    logits go all-NaN at draw time; non-finite values must fail loudly at
+    construction."""
+    for bad in (dict(temperature=float("nan")),
+                dict(temperature=float("inf")),
+                dict(top_p=float("nan")),
+                dict(top_p=float("inf"))):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
 
 
 # ------------------------------------------------------- engine determinism --
